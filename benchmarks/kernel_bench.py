@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle timing,
+plus the analytic TPU-side traffic model for each kernel."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bitserial.ops import bitserial_add
+from repro.kernels.bitserial.ref import bitserial_add_ref
+from repro.kernels.majx.ops import majx
+from repro.kernels.majx.ref import majx_ref
+from repro.kernels.mismatch.ops import mismatch_count
+from repro.kernels.mismatch.ref import mismatch_count_ref
+from repro.kernels.rowcopy.ops import fanout
+
+
+def _timeit(fn, reps=3):
+    r = fn()
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_benchmarks():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    x = jnp.asarray(rng.integers(0, 2**32, (9, 64, 2048), dtype=np.uint32))
+    us_ref = _timeit(jax.jit(majx_ref), reps=3) if False else _timeit(
+        lambda: majx_ref(x))
+    us_k = _timeit(lambda: majx(x))
+    # HBM traffic model on TPU: read 9 planes + write 1
+    traffic = x.nbytes * 10 / 9
+    rows.append(("kernel_majx9_64x2048", us_k,
+                 f"ref_us={us_ref:.0f};tpu_bytes={traffic:.0f}"))
+
+    a = jnp.asarray(rng.integers(0, 2**32, (32, 16, 512), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, (32, 16, 512), dtype=np.uint32))
+    us_ref = _timeit(lambda: bitserial_add_ref(a, b))
+    us_k = _timeit(lambda: bitserial_add(a, b))
+    # fused kernel: one round trip; naive plane-at-a-time: 32 round trips
+    rows.append(("kernel_bitserial_add_32x16x512", us_k,
+                 f"ref_us={us_ref:.0f};traffic_reduction=32x"))
+
+    src = jnp.asarray(rng.integers(0, 2**32, (8, 4096), dtype=np.uint32))
+    us_k = _timeit(lambda: fanout(src, 31))
+    rows.append(("kernel_fanout31_8x4096", us_k,
+                 f"hbm_read_bytes={src.nbytes};write={src.nbytes*31}"))
+
+    g = jnp.asarray(rng.integers(0, 2**32, (1 << 18,), dtype=np.uint32))
+    w = jnp.asarray(rng.integers(0, 2**32, (1 << 18,), dtype=np.uint32))
+    us_ref = _timeit(lambda: mismatch_count_ref(g, w))
+    us_k = _timeit(lambda: mismatch_count(g, w))
+    rows.append(("kernel_mismatch_1M_cells", us_k, f"ref_us={us_ref:.0f}"))
+    return rows

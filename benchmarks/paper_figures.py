@@ -1,0 +1,272 @@
+"""Reproduction of every SiMRA-DRAM figure/table as benchmark functions.
+
+Each function returns a list of CSV rows (name, us_per_call, derived)
+where ``derived`` carries the figure's headline quantity.  benchmarks/run.py
+prints them; EXPERIMENTS.md §Paper-validation quotes them.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as cal
+from repro.core import chargeshare as cs
+from repro.core import power as pw
+from repro.core.errormodel import ErrorModel
+from repro.pud import latency as lat
+from repro.pud.arith import run_elementwise
+from repro.pud.secure_erase import destruction_time_ns, speedup_over_rowclone
+
+
+def _timeit(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# Fig 3: SiMRA success vs (t1, t2) x N -----------------------------------
+
+
+def fig3_simra_timing():
+    em = ErrorModel("H")
+    rows = []
+    for t1 in (1.5, 3.0):
+        for t2 in (1.5, 3.0):
+            for n in cal.N_ACT_LEVELS:
+                s = em.simra_success(n, t1=t1, t2=t2)
+                rows.append((f"fig3_simra_n{n}_t1_{t1}_t2_{t2}", 0.0,
+                             f"success={s:.4f}"))
+    return rows
+
+
+# Fig 4: SiMRA temperature / voltage -------------------------------------
+
+
+def fig4_simra_temp_vpp():
+    em = ErrorModel("H")
+    rows = []
+    for t in cal.TEMPERATURES_C:
+        s = em.simra_success(32, temp_c=t)
+        rows.append((f"fig4a_simra32_T{t:.0f}", 0.0, f"success={s:.4f}"))
+    for v in cal.VPP_LEVELS_V:
+        s = em.simra_success(32, vpp_v=v)
+        rows.append((f"fig4b_simra32_V{v:.1f}", 0.0, f"success={s:.4f}"))
+    return rows
+
+
+# Fig 5: power ------------------------------------------------------------
+
+
+def fig5_power():
+    rows = []
+    for op, w in pw.power_table().items():
+        rows.append((f"fig5_power_{op}", 0.0, f"watts={w:.3f}"))
+    rows.append(("fig5_simra32_vs_ref", 0.0,
+                 f"delta={pw.simra_power_w(32)/pw.STANDARD_POWER_W['REF']-1:+.4f}"))
+    return rows
+
+
+# Fig 6: MAJ3 vs timing x N (incl. the replication ladder) -----------------
+
+
+def fig6_maj3_timing():
+    em = ErrorModel("H")
+    rows = []
+    for t1, t2 in ((1.5, 3.0), (3.0, 3.0), (4.5, 3.0), (1.5, 1.5)):
+        for n in (4, 8, 16, 32):
+            s = em.majx_success(3, n, t1=t1, t2=t2)
+            rows.append((f"fig6_maj3_n{n}_t1_{t1}_t2_{t2}", 0.0,
+                         f"success={s:.4f}"))
+    return rows
+
+
+# Fig 7: MAJX x data pattern ----------------------------------------------
+
+
+def fig7_majx_patterns():
+    em = ErrorModel("H")
+    rows = []
+    for x in (3, 5, 7, 9):
+        for pat in cal.DATA_PATTERNS:
+            s = em.majx_success(x, 32, pattern=pat)
+            rows.append((f"fig7_maj{x}_{pat.replace('/', '_')}", 0.0,
+                         f"success={s:.4f}"))
+    return rows
+
+
+# Fig 8/9: MAJX temperature / voltage -------------------------------------
+
+
+def fig8_majx_temperature():
+    em = ErrorModel("H")
+    rows = []
+    for x in (3, 5, 7, 9):
+        for t in cal.TEMPERATURES_C:
+            for n in (cal.min_activation_for(x), 32):
+                s = em.majx_success(x, n, temp_c=t)
+                rows.append((f"fig8_maj{x}_n{n}_T{t:.0f}", 0.0,
+                             f"success={s:.4f}"))
+    return rows
+
+
+def fig9_majx_voltage():
+    em = ErrorModel("H")
+    rows = []
+    for x in (3, 5, 7, 9):
+        for v in cal.VPP_LEVELS_V:
+            s = em.majx_success(x, 32, vpp_v=v)
+            rows.append((f"fig9_maj{x}_V{v:.1f}", 0.0, f"success={s:.4f}"))
+    return rows
+
+
+# Fig 10-12: Multi-RowCopy -------------------------------------------------
+
+
+def fig10_mrc_timing():
+    em = ErrorModel("H")
+    rows = []
+    for t1 in (1.5, 3.0, 6.0, 9.0, 36.0):
+        for n_dest in (1, 3, 7, 15, 31):
+            s = em.mrc_success(n_dest, t1=t1)
+            rows.append((f"fig10_mrc{n_dest}_t1_{t1}", 0.0,
+                         f"success={s:.5f}"))
+    return rows
+
+
+def fig11_mrc_patterns():
+    em = ErrorModel("H")
+    rows = []
+    for pat in ("0x00", "0xFF", "random"):
+        for n_dest in (1, 3, 7, 15, 31):
+            s = em.mrc_success(n_dest, pattern=pat)
+            rows.append((f"fig11_mrc{n_dest}_{pat}", 0.0, f"success={s:.5f}"))
+    return rows
+
+
+def fig12_mrc_temp_vpp():
+    em = ErrorModel("H")
+    rows = []
+    for t in cal.TEMPERATURES_C:
+        rows.append((f"fig12a_mrc31_T{t:.0f}", 0.0,
+                     f"success={em.mrc_success(31, temp_c=t):.5f}"))
+    for v in cal.VPP_LEVELS_V:
+        rows.append((f"fig12b_mrc31_V{v:.1f}", 0.0,
+                     f"success={em.mrc_success(31, vpp_v=v):.5f}"))
+    return rows
+
+
+# Fig 15: SPICE Monte-Carlo ------------------------------------------------
+
+
+def fig15_spice_mc():
+    key = jax.random.PRNGKey(0)
+    out = cs.spice_study(key, iters=4000)
+    rows = []
+    for (n, pv), d in out.items():
+        us = 0.0
+        rows.append((f"fig15_n{n}_pv{int(pv*100)}", us,
+                     f"dev={d['dev_mean']:.4f};success={d['success_rate']:.4f}"))
+    gain = cs.deviation_mean(32) / cs.deviation_mean(4) - 1
+    rows.append(("fig15_dev_gain_32_over_4", 0.0, f"gain={gain:+.4f}"))
+    return rows
+
+
+# Fig 16: the seven microbenchmarks ---------------------------------------
+
+#: active subarrays pipelining MAJX issues (bank-level parallelism; the
+#: paper schedules across 16 banks x 3 subarrays — 5 concurrently active
+#: keeps the model within a DDR4 power budget, cf. Fig 5).
+ACTIVE_SUBARRAYS = 5
+
+
+def _microbench_time_ns(op: str, mfr: str, tier: int) -> float:
+    """Analytical §8.1 model: time = max(critical path, op-issue time /
+    active subarrays), with best-group success retries."""
+    em = ErrorModel(mfr)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2**32, 8, dtype=np.uint32)
+    b = np.maximum(rng.integers(0, 2**32, 8, dtype=np.uint32), 1)
+    n_act = 4 if tier == 3 else 32
+    _, prog = run_elementwise(op, a, b, tier=tier, n_act=n_act)
+    bg = cal.MAJX_BEST_GROUP_SUCCESS[mfr]
+    bg3_baseline = cal.MAJ3_4ROW_BEST_GROUP_SUCCESS[mfr]
+
+    def op_time(x: int) -> float:
+        s = bg.get(x, 0.005) if tier > 3 else bg3_baseline
+        return lat.LAT.majx_apa / max(s, 1e-3)
+
+    total = 0.0
+    crit = 0.0
+    n_maj = {3: 0, 5: 0, 7: 0, 9: 0}
+    for o in prog.ops:
+        if o.kind == "MAJ":
+            total += op_time(o.x)
+            n_maj[o.x] += 1
+        elif o.kind in ("NOT", "COPY"):
+            total += lat.LAT.rowclone
+    # critical path: the serial carry chain (adds/sub/mul/div);
+    # tier>=7 halves its depth via the MAJ7 two-position skip.
+    if op in ("add", "sub"):
+        chain = 32
+    elif op == "mul":
+        chain = 32 * 32
+    elif op == "div":
+        chain = 33 * 32
+    else:
+        chain = 3
+    if tier >= 7:
+        chain /= 2
+    worst_x = max((x for x, c in n_maj.items() if c), default=3)
+    crit = chain * op_time(worst_x if tier >= 7 else 3)
+    return max(crit, total / ACTIVE_SUBARRAYS)
+
+
+def fig16_microbench_speedups():
+    rows = []
+    for mfr in ("M", "H"):
+        tiers = (5, 7) if mfr == "M" else (5, 7, 9)
+        speedups = {t: [] for t in tiers}
+        for op in cal.MICROBENCHMARKS:
+            base = _microbench_time_ns(op, mfr, tier=3)
+            for t in tiers:
+                sp = base / _microbench_time_ns(op, mfr, tier=t)
+                speedups[t].append(sp)
+                rows.append((f"fig16_{mfr}_{op}_maj{t}", 0.0,
+                             f"speedup={sp:.3f}"))
+        for t in tiers:
+            rows.append((f"fig16_{mfr}_avg_maj{t}", 0.0,
+                         f"speedup={np.mean(speedups[t]):.3f}"))
+    return rows
+
+
+# Fig 17: cold-boot content destruction ------------------------------------
+
+
+def fig17_cold_boot():
+    rows = []
+    for n in (2, 4, 8, 16, 32):
+        rows.append((f"fig17_mrc{n}", destruction_time_ns("mrc", n) / 1e3,
+                     f"speedup={speedup_over_rowclone('mrc', n):.2f}"))
+    rows.append(("fig17_frac", destruction_time_ns("frac") / 1e3,
+                 f"speedup={speedup_over_rowclone('frac'):.2f}"))
+    rows.append(("fig17_rowclone", destruction_time_ns("rowclone") / 1e3,
+                 "speedup=1.00"))
+    return rows
+
+
+# Table 1/2: tested devices ------------------------------------------------
+
+
+def table1_devices():
+    rows = []
+    for (mfr, rev), d in cal.TABLE1.items():
+        rows.append((f"table1_{mfr}_{rev}", 0.0,
+                     f"chips={d['chips']};density={d['density']};"
+                     f"subarrays={d['subarray_sizes']}"))
+    return rows

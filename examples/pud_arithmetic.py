@@ -1,0 +1,46 @@
+"""The §8.1 case study as a runnable example: the seven majority-based
+microbenchmarks across MAJX tiers, with the calibrated latency model —
+reproducing the structure of the paper's Fig. 16.
+
+Usage:  PYTHONPATH=src python examples/pud_arithmetic.py
+"""
+
+import numpy as np
+
+from benchmarks.paper_figures import _microbench_time_ns
+from repro.core import calibration as cal
+from repro.pud.arith import run_elementwise
+
+
+def main():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2**32, 32, dtype=np.uint32)
+    b = np.maximum(rng.integers(0, 2**32, 32, dtype=np.uint32), 1)
+
+    print("op   tier  DRAM-ops   exact   modeled-us")
+    for op in cal.MICROBENCHMARKS:
+        for tier in (3, 5, 7):
+            out, prog = run_elementwise(op, a, b, tier=tier,
+                                        n_act=32 if tier > 3 else 4)
+            ref = {"and": a & b, "or": a | b, "xor": a ^ b,
+                   "add": (a + b).astype(np.uint32),
+                   "sub": (a - b).astype(np.uint32),
+                   "mul": (a * b).astype(np.uint32),
+                   "div": a // b}[op]
+            exact = bool((np.asarray(out) == ref).all())
+            t_us = _microbench_time_ns(op, "H", tier) / 1e3
+            print(f"{op:5s} MAJ{tier}  {len(prog.ops):7d}   {exact}   "
+                  f"{t_us:10.1f}")
+    print("\nFig.16-style speedups over the MAJ3@4-row baseline:")
+    for mfr in ("M", "H"):
+        tiers = (5, 7) if mfr == "M" else (5, 7, 9)
+        for t in tiers:
+            sp = [(_microbench_time_ns(op, mfr, 3)
+                   / _microbench_time_ns(op, mfr, t))
+                  for op in cal.MICROBENCHMARKS]
+            print(f"  Mfr {mfr} MAJ{t}: avg {np.mean(sp):.2f}x "
+                  f"(paper: M +121.6%/H +46.5% avg for the new MAJX ops)")
+
+
+if __name__ == "__main__":
+    main()

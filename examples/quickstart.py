@@ -1,0 +1,72 @@
+"""Quickstart: the paper's PUD operations through the public API.
+
+Runs in ~30s on CPU:
+  1. simultaneous many-row activation on the behavioural DRAM model,
+  2. MAJ5 with input replication (the paper's headline capability),
+  3. Multi-RowCopy 1 -> 31,
+  4. majority-based 32-bit addition compiled to a PUD program + its
+     latency/energy under the calibrated model,
+  5. the same majority logic as a TPU Pallas kernel (interpret mode).
+
+Usage:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as cal
+from repro.core import majx, rowcopy
+from repro.core.errormodel import ErrorModel
+from repro.core.subarray import Subarray
+from repro.kernels.majx.ops import majx as majx_kernel
+from repro.pud.arith import run_elementwise
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # 1) simultaneous many-row activation -------------------------------
+    sa = Subarray(cols=1024, seed=0)
+    em = ErrorModel("H")
+    print("== SiMRA: N-row activation success (calibrated to Obs 1) ==")
+    for n in cal.N_ACT_LEVELS:
+        print(f"  {n:2d}-row activation: {em.simra_success(n)*100:.2f}%")
+
+    # 2) MAJ5 with input replication -------------------------------------
+    ops = [jnp.asarray(rng.integers(0, 2**32, 32, dtype=np.uint32))
+           for _ in range(5)]
+    print("\n== MAJ5: success with/without input replication (Obs 10) ==")
+    for n_act in (8, 32):
+        sa = Subarray(cols=1024, seed=1)
+        acc = majx.majx_success_measured(sa, ops, n_act)
+        print(f"  MAJ5 @ {n_act:2d}-row activation: measured {acc*100:.1f}% "
+              f"(model {em.majx_success(5, n_act)*100:.1f}%)")
+
+    # 3) Multi-RowCopy ----------------------------------------------------
+    sa = Subarray(cols=1024, seed=2, ideal=True)
+    src = jnp.asarray(rng.integers(0, 2**32, sa.n_words, dtype=np.uint32))
+    _, dests = rowcopy.multi_rowcopy(sa, src, 32)
+    ok = all(bool((sa.read_row(d) == src).all()) for d in dests)
+    print(f"\n== Multi-RowCopy: 1 source -> {len(dests)} destinations, "
+          f"bit-exact={ok} ==")
+
+    # 4) majority-based arithmetic (§8.1) --------------------------------
+    a = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    b = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    out, prog = run_elementwise("add", a, b, tier=5, n_act=32)
+    assert (np.asarray(out) == (a + b).astype(np.uint32)).all()
+    lat_us = prog.latency_ns(em, pipelined=True, best_group=True) / 1e3
+    print(f"\n== PUD 32-bit ADD (MAJ5 construction): {len(prog.ops)} DRAM "
+          f"ops, {lat_us:.1f} us modeled, bit-exact vs numpy ==")
+
+    # 5) the TPU-side MAJX kernel -----------------------------------------
+    planes = jnp.asarray(rng.integers(0, 2**32, (9, 8, 512), dtype=np.uint32))
+    voted = majx_kernel(planes)
+    print(f"\n== Pallas MAJ9 kernel over {planes.shape} packed planes: "
+          f"out {voted.shape} (interpret mode, CSA bit-sliced counter) ==")
+    print("\nquickstart OK")
+
+
+if __name__ == "__main__":
+    main()

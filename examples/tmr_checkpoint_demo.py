@@ -1,0 +1,47 @@
+"""TMR-protected checkpointing: the paper's majority-vote error correction
+(§8.1) applied to training state, healing silent data corruption.
+
+Usage:  PYTHONPATH=src python examples/tmr_checkpoint_demo.py
+"""
+
+import os
+import tempfile
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.ckpt import tmr_store
+from repro.train.step import init_train_state
+
+
+def main():
+    cfg = get_config("chatglm3-6b", smoke=True)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = tmr_store.save(state, d, step=100, replicas=3)
+        print(f"[tmr] wrote {len(paths)} replicas")
+
+        # simulate silent data corruption in one replica's payload
+        shard = os.path.join(d, "replica_1", "step_00000100", "shard_p0.npz")
+        blob = bytearray(open(shard, "rb").read())
+        for off in range(len(blob) // 2, len(blob) // 2 + 64):
+            blob[off] ^= 0xA5
+        open(shard, "wb").write(bytes(blob))
+        print("[tmr] corrupted 64 bytes of replica_1 (SDC injection)")
+
+        restored, step, healed = tmr_store.restore(state, d)
+        exact = all(
+            (jax.numpy.asarray(a) == jax.numpy.asarray(b)).all()
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)))
+        print(f"[tmr] restored step {step}: healed {healed} replica(s), "
+              f"bit-exact={bool(exact)}")
+
+        n_healed = tmr_store.scrub(state, d)
+        print(f"[tmr] scrubber re-replicated {n_healed} corrupted replica(s)")
+        _, _, healed2 = tmr_store.restore(state, d)
+        print(f"[tmr] post-scrub restore: {healed2} unhealthy replicas")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(name):
+    p = os.path.join(HERE, name)
+    return json.load(open(p)) if os.path.exists(p) else []
+
+
+def fmt(x, nd=3):
+    if x == 0:
+        return "0"
+    return f"{x:.2e}" if (abs(x) < 1e-3 or abs(x) >= 1e4) else f"{x:.{nd}f}"
+
+
+def main():
+    single = load("dryrun_single.json")
+    multi = load("dryrun_multi.json")
+    serve = load("dryrun_serve.json")
+
+    multi_status = {(r["arch"], r["shape"]): r for r in multi}
+    serve_by = {(r["arch"], r["shape"]): r for r in serve
+                if r.get("status") == "ok"}
+
+    # ---- dry-run table: per cell, both meshes
+    lines = ["| arch | shape | 16x16 mem/chip | 2x16x16 mem/chip | status |",
+             "|---|---|---|---|---|"]
+    order = sorted({(r["arch"], r["shape"]) for r in single},
+                   key=lambda t: (t[0], t[1]))
+    for arch, shape in order:
+        r1 = next(r for r in single if (r["arch"], r["shape"]) == (arch, shape))
+        r2 = multi_status.get((arch, shape), {})
+        if r1.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | skipped: "
+                         f"{r1['reason'][:60]} |")
+            continue
+        m1 = f"{r1['memory']['total_gb']:.1f} GB" if r1.get("status") == "ok" else "ERR"
+        m2 = (f"{r2['memory']['total_gb']:.1f} GB"
+              if r2.get("status") == "ok" else r2.get("status", "—"))
+        lines.append(f"| {arch} | {shape} | {m1} | {m2} | compiled |")
+    dryrun_table = "\n".join(lines)
+
+    # ---- roofline table (single-pod)
+    lines = ["| arch | shape | t_compute | t_memory | t_collective | bound |"
+             " frac | MODEL_FLOPS | MODEL/HLO | moved-by |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        "collective": "less wire traffic: bf16 collectives (2x on TPU), "
+                      "fewer regathers",
+        "memory": "smaller dtypes / fewer remat passes",
+        "compute": "higher MXU utilization (already near bound)",
+    }
+    for arch, shape in order:
+        r = next(r for r in single if (r["arch"], r["shape"]) == (arch, shape))
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt(rl['t_compute_s'])} | "
+            f"{fmt(rl['t_memory_s'])} | {fmt(rl['t_collective_s'])} | "
+            f"{rl['bottleneck']} | {rl['roofline_fraction']:.3f} | "
+            f"{fmt(rl['model_flops'])} | {rl['hlo_efficiency']:.2f} | "
+            f"{hints[rl['bottleneck']]} |")
+    roofline_table = "\n".join(lines)
+
+    # ---- serve-rules comparison
+    lines = ["| arch | shape | baseline t_coll | SERVE_RULES t_coll | gain |",
+             "|---|---|---|---|---|"]
+    for arch, shape in order:
+        if (arch, shape) not in serve_by:
+            continue
+        r0 = next(r for r in single if (r["arch"], r["shape"]) == (arch, shape))
+        if r0.get("status") != "ok":
+            continue
+        t0 = r0["roofline"]["t_collective_s"]
+        t1 = serve_by[(arch, shape)]["roofline"]["t_collective_s"]
+        if t1 > 0:
+            lines.append(f"| {arch} | {shape} | {fmt(t0)} s | {fmt(t1)} s | "
+                         f"{t0/t1:.1f}x |")
+    serve_table = "\n".join(lines)
+
+    p = os.path.join(HERE, "..", "EXPERIMENTS.md")
+    text = open(p).read()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table)
+    text = text.replace("<!-- SERVE_TABLE -->", serve_table)
+    open(p, "w").write(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

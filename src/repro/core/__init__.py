@@ -1,0 +1,17 @@
+"""Core PUD substrate: the paper's contribution as composable JAX modules.
+
+- :mod:`repro.core.calibration` — every number the paper reports (anchors).
+- :mod:`repro.core.bitplanes` — packed bit-plane tensors and majority ops.
+- :mod:`repro.core.decoder` — hierarchical row-decoder hypothesis (§7.1).
+- :mod:`repro.core.commands` — DRAM command-sequence IR (APA et al.).
+- :mod:`repro.core.subarray` — behavioural subarray simulator.
+- :mod:`repro.core.errormodel` — calibrated success-rate surfaces (§4-§6).
+- :mod:`repro.core.chargeshare` — Monte-Carlo bitline model (§7.2).
+- :mod:`repro.core.majx` / :mod:`repro.core.rowcopy` — op-level wrappers.
+- :mod:`repro.core.power` — Fig. 5 power model.
+"""
+
+from repro.core.calibration import DEVICE_ANCHORS  # noqa: F401
+from repro.core.decoder import RowDecoder  # noqa: F401
+from repro.core.errormodel import ErrorModel  # noqa: F401
+from repro.core.subarray import DeviceProfile, Subarray  # noqa: F401

@@ -1,0 +1,198 @@
+"""Packed bit-plane tensors: the digital substrate of the PUD model.
+
+A DRAM row in the paper is a 65,536-bit vector (8KB x8 chip row).  We model
+rows (and bit-serial operands) as ``uint32``-packed planes: a plane of
+``n`` logical bits is a ``uint32[ceil(n/32)]`` array, LSB-first within each
+word.  All bulk-bitwise PUD ops (MAJX, Multi-RowCopy, the bit-serial
+arithmetic of §8.1) operate on these planes; the Pallas kernels in
+``repro.kernels`` consume the same layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+UMAX = np.uint32(0xFFFFFFFF)
+
+
+def n_words(n_bits: int) -> int:
+    """Number of uint32 words needed for ``n_bits`` logical bits."""
+    return -(-n_bits // WORD_BITS)
+
+
+def pack(bits: jax.Array) -> jax.Array:
+    """Pack a boolean/0-1 array of shape (..., n_bits) into uint32 planes.
+
+    Returns shape (..., ceil(n_bits/32)), LSB-first.  n_bits is padded with
+    zeros to a multiple of 32.
+    """
+    bits = jnp.asarray(bits)
+    n_bits = bits.shape[-1]
+    pad = n_words(n_bits) * WORD_BITS - n_bits
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    b = bits.reshape(*bits.shape[:-1], -1, WORD_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack`; returns bool array of shape (..., n_bits)."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], -1)
+    return bits[..., :n_bits].astype(jnp.bool_)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Per-word population count (uint32 in, int32 out)."""
+    w = jnp.asarray(words, dtype=jnp.uint32)
+    w = w - ((w >> 1) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> 2) & jnp.uint32(0x33333333))
+    w = (w + (w >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((w * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def majority(planes: jax.Array, axis: int = 0) -> jax.Array:
+    """Bitwise majority across ``planes`` (odd count) along ``axis``.
+
+    Implements the charge-sharing semantics of an N-row activation for
+    odd N: each output bit is 1 iff more than half the stacked bits are 1.
+    Works on packed uint32 planes by per-bit counting; for N=3 the closed
+    form ``(a&b)|(b&c)|(a&c)`` in :func:`maj3_words` is faster.
+    """
+    planes = jnp.asarray(planes, dtype=jnp.uint32)
+    n = planes.shape[axis]
+    planes = jnp.moveaxis(planes, axis, 0)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)  # (n, ..., words, 32)
+    count = jnp.sum(bits.astype(jnp.int32), axis=0)
+    out_bits = (2 * count > n).astype(jnp.uint32)
+    return jnp.sum(out_bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def majority_with_ties(planes: jax.Array, tie_value: int, axis: int = 0) -> jax.Array:
+    """Majority that resolves exact ties (even N) to ``tie_value`` (0/1).
+
+    Models the sense-amp bias of §3.3 fn.5: Mfr M amplifiers are biased to
+    a fixed polarity, so an even split resolves deterministically.
+    """
+    planes = jnp.asarray(planes, dtype=jnp.uint32)
+    n = planes.shape[axis]
+    planes = jnp.moveaxis(planes, axis, 0)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)
+    count = jnp.sum(bits.astype(jnp.int32), axis=0)
+    gt = 2 * count > n
+    tie = 2 * count == n
+    out_bits = jnp.where(tie, jnp.uint32(tie_value), gt.astype(jnp.uint32))
+    return jnp.sum(out_bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def maj3_words(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Closed-form bitwise MAJ3 on packed words: (a&b)|(b&c)|(a&c)."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    c = jnp.asarray(c, jnp.uint32)
+    return (a & b) | (b & c) | (a & c)
+
+
+def weighted_majority(planes: jax.Array, weights: jax.Array, axis: int = 0) -> jax.Array:
+    """Weighted bitwise majority: 1 iff sum(w_i * bit_i) > sum(w)/2.
+
+    Used by the MAJ-composition identities of §8.1 (e.g. the two-position
+    carry c2 = MAJ7(a1,a1,b1,b1,a0,b0,c0) is weighted majority with weights
+    (2,2,1,1,1)).
+    """
+    planes = jnp.asarray(planes, dtype=jnp.uint32)
+    planes = jnp.moveaxis(planes, axis, 0)
+    w = jnp.asarray(weights, dtype=jnp.int32).reshape(-1, *([1] * (planes.ndim - 1)))
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = ((planes[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.int32)
+    score = jnp.sum(bits * w[..., None], axis=0)
+    total = jnp.sum(jnp.asarray(weights, jnp.int32))
+    out_bits = (2 * score > total).astype(jnp.uint32)
+    return jnp.sum(out_bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def pack_uint_elements(x: jax.Array, n_bits: int = 32) -> jax.Array:
+    """Transpose ``k`` unsigned integers into ``n_bits`` bit-planes.
+
+    Input: integer array of shape (..., k).  Output: uint32 planes of shape
+    (..., n_bits, ceil(k/32)) — plane ``i`` holds bit ``i`` of every element.
+    This is the column-parallel (bit-serial SIMD) layout the §8.1
+    microbenchmarks compute in: one DRAM row per bit position.
+    """
+    x = jnp.asarray(x)
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    bits = (x[..., None, :] >> shifts[:, None]) & jnp.uint32(1)  # (..., n_bits, k)
+    return pack(bits)
+
+
+def unpack_uint_elements(planes: jax.Array, k: int) -> jax.Array:
+    """Inverse of :func:`pack_uint_elements` -> uint32 array (..., k)."""
+    planes = jnp.asarray(planes, jnp.uint32)
+    n_bits = planes.shape[-2]
+    bits = unpack(planes, k).astype(jnp.uint32)  # (..., n_bits, k)
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[:, None], axis=-2, dtype=jnp.uint32)
+
+
+def bitcast_to_planes(x: jax.Array) -> tuple[jax.Array, tuple, jnp.dtype]:
+    """View an arbitrary fixed-width array as packed uint32 words.
+
+    Returns (words, original_shape, original_dtype) so that
+    :func:`bitcast_from_planes` can reconstruct it.  Used by the TMR
+    checkpoint protection: majority voting is bitwise, so any dtype can be
+    protected by voting on its raw words.
+    """
+    x = jnp.asarray(x)
+    nbytes = x.dtype.itemsize
+    flat = x.reshape(-1)
+    if nbytes == 4:
+        words = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    elif nbytes == 2:
+        halves = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        pad = (-halves.size) % 2
+        if pad:
+            halves = jnp.concatenate([halves, jnp.zeros((pad,), jnp.uint16)])
+        pair = halves.reshape(-1, 2).astype(jnp.uint32)
+        words = pair[:, 0] | (pair[:, 1] << 16)
+    elif nbytes == 1:
+        bytes_ = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+        pad = (-bytes_.size) % 4
+        if pad:
+            bytes_ = jnp.concatenate([bytes_, jnp.zeros((pad,), jnp.uint8)])
+        quad = bytes_.reshape(-1, 4).astype(jnp.uint32)
+        shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+        words = jnp.sum(quad << shifts, axis=-1, dtype=jnp.uint32)
+    else:
+        raise TypeError(f"unsupported itemsize {nbytes} for dtype {x.dtype}")
+    return words, x.shape, x.dtype
+
+
+def bitcast_from_planes(words: jax.Array, shape: tuple, dtype) -> jax.Array:
+    """Inverse of :func:`bitcast_to_planes`."""
+    dtype = jnp.dtype(dtype)
+    n_elem = int(np.prod(shape)) if shape else 1
+    nbytes = dtype.itemsize
+    words = jnp.asarray(words, jnp.uint32)
+    if nbytes == 4:
+        flat = jax.lax.bitcast_convert_type(words, dtype)[:n_elem]
+    elif nbytes == 2:
+        lo = (words & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        hi = (words >> 16).astype(jnp.uint16)
+        halves = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n_elem]
+        flat = jax.lax.bitcast_convert_type(halves, dtype)
+    elif nbytes == 1:
+        shifts = jnp.arange(4, dtype=jnp.uint32) * 8
+        bytes_ = ((words[:, None] >> shifts) & jnp.uint32(0xFF)).astype(jnp.uint8)
+        flat = jax.lax.bitcast_convert_type(bytes_.reshape(-1)[:n_elem], dtype)
+    else:
+        raise TypeError(f"unsupported itemsize {nbytes} for dtype {dtype}")
+    return flat.reshape(shape)

@@ -1,0 +1,130 @@
+"""Monte-Carlo charge-sharing model of the bitline (paper §7.2 / §3.5).
+
+The paper backs its real-chip observations with LTspice simulations of a
+multi-row activation: N cell capacitors (each storing VDD, 0, or VDD/2 for
+Frac-neutral rows) share charge with a precharged bitline, and the sense
+amplifier resolves the resulting perturbation if it exceeds the reliable
+sensing margin.  We reproduce that study with a closed-form charge-sharing
+computation plus Monte-Carlo process variation, calibrated so that:
+
+* MAJ3 with 32-row activation shows **+159.05 %** bitline deviation over
+  4-row activation (paper §7.2) — this pins ``CB_OVER_CC``;
+* at 40 % process variation, MAJ3@4-row success drops ~46.58 % while
+  MAJ3@32-row drops ~0.01 % — this pins ``SENSE_MARGIN_FRAC``.
+
+Charge sharing (all capacitances in units of the nominal cell cap C_c,
+voltages in units of VDD):
+
+    dV = sum_i C_i (v_i - 1/2) / (C_b + sum_i C_i),   v_i in {0, 1/2, 1}
+
+Process variation draws C_i ~ U(1-p, 1+p) per cell (the paper varies
+capacitor/transistor parameters by 10..40 % over 10^4 Monte-Carlo runs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as cal
+
+# Bitline capacitance in units of C_c.  Solves
+#   dev(32-row) / dev(4-row) = 1 + 1.5905
+# with dev(N) = k / (C_b + N) for MAJ3(1,1,0) replicated k = floor(N/3) times
+# and N % 3 Frac-neutral rows (which add capacitance but no differential
+# charge):  10 (C_b + 4) = 2.5905 (C_b + 32).
+CB_OVER_CC = (2.5905 * 32.0 - 10.0 * 4.0) / (10.0 - 2.5905)
+
+# Reliable sensing margin as a fraction of VDD.  Calibrated (see
+# tests/test_chargeshare.py) so the 40 %-PV MAJ3@4-row success lands at
+# 1 - 0.4658 of its 0 %-PV value while MAJ3@32-row stays within 0.1 %.
+SENSE_MARGIN_FRAC = 0.04936
+
+
+@dataclasses.dataclass(frozen=True)
+class BitlineModel:
+    cb_over_cc: float = CB_OVER_CC
+    sense_margin: float = SENSE_MARGIN_FRAC
+
+    def deviation(self, charges: jax.Array, caps: jax.Array) -> jax.Array:
+        """Bitline deviation dV/VDD for one charge-sharing event.
+
+        charges: (..., n_cells) in {0.0, 0.5, 1.0}
+        caps:    (..., n_cells) cell capacitances in units of C_c
+        """
+        num = jnp.sum(caps * (charges - 0.5), axis=-1)
+        den = self.cb_over_cc + jnp.sum(caps, axis=-1)
+        return num / den
+
+    def sense(self, deviation: jax.Array) -> jax.Array:
+        """Sense-amp output: +1 (VDD), -1 (0V), or 0 (unreliable)."""
+        ok = jnp.abs(deviation) > self.sense_margin
+        return jnp.where(ok, jnp.sign(deviation), 0.0)
+
+
+def maj3_cell_charges(n_act: int) -> jnp.ndarray:
+    """Cell charges for MAJ3(1,1,0) under N-row activation (§3.3 plan).
+
+    floor(N/3) copies of each operand; N % 3 neutral rows at VDD/2.
+    """
+    copies, neutral = cal.replication_plan(3, n_act)
+    vals = [1.0, 1.0, 0.0] * copies + [0.5] * neutral
+    return jnp.asarray(vals)
+
+
+@functools.partial(jax.jit, static_argnames=("n_act", "iters"))
+def monte_carlo_maj3(
+    key: jax.Array,
+    n_act: int,
+    pv: float,
+    iters: int = cal.SPICE_MC_ITERS,
+) -> dict[str, jax.Array]:
+    """Monte-Carlo study of MAJ3(1,1,0) with N-row activation.
+
+    Returns the deviation sample and the success indicator (sense amp
+    resolves toward the correct majority, here logical 1).
+    """
+    model = BitlineModel()
+    charges = maj3_cell_charges(n_act)
+    u = jax.random.uniform(
+        key, (iters, charges.shape[0]), minval=-pv, maxval=pv
+    )
+    caps = 1.0 + u
+    dev = model.deviation(charges[None, :], caps)
+    sensed = model.sense(dev)
+    return {"deviation": dev, "success": sensed > 0.0}
+
+
+def deviation_mean(n_act: int) -> float:
+    """Analytic 0-PV deviation of MAJ3(1,1,0) under N-row activation."""
+    copies, neutral = cal.replication_plan(3, n_act)
+    return 0.5 * copies / (CB_OVER_CC + 3 * copies + neutral)
+
+
+def spice_study(key: jax.Array, iters: int = cal.SPICE_MC_ITERS):
+    """Full §7.2 reproduction: deviations + success across N x PV grid.
+
+    Returns {(n_act, pv): {"dev_mean", "dev_std", "success_rate"}}.
+    """
+    out = {}
+    for n_act in (1, 4, 8, 16, 32):
+        for pv in cal.SPICE_PV_LEVELS:
+            key, sub = jax.random.split(key)
+            if n_act == 1:
+                # Single-row activation baseline (one charged cell).
+                model = BitlineModel()
+                u = jax.random.uniform(sub, (iters, 1), minval=-pv, maxval=pv)
+                dev = model.deviation(jnp.ones((iters, 1)), 1.0 + u)
+                succ = model.sense(dev) > 0
+            else:
+                res = monte_carlo_maj3(sub, n_act, pv, iters)
+                dev, succ = res["deviation"], res["success"]
+            out[(n_act, pv)] = {
+                "dev_mean": float(jnp.mean(dev)),
+                "dev_std": float(jnp.std(dev)),
+                "success_rate": float(jnp.mean(succ)),
+            }
+    return out

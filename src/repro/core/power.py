@@ -1,0 +1,54 @@
+"""Power model for SiMRA vs standard DRAM operations (paper Fig. 5, Obs 5).
+
+The paper measures average module power for RD, WR, ACT+PRE, REF, and N-row
+SiMRA activation, reporting one pinned relationship: 32-row activation draws
+21.19 % *less* power than REF (the hungriest standard op).  Absolute watt
+values are read off Fig. 5 qualitatively; we encode representative DDR4
+module-level numbers (documented model assumption) and pin the Obs 5 ratio
+exactly, with SiMRA power growing logarithmically in the number of
+simultaneously-asserted wordlines (wordline/CSL driver energy dominates).
+"""
+
+from __future__ import annotations
+
+from repro.core import calibration as cal
+
+#: Standard-operation average power, watts per module (model assumption;
+#: representative of a DDR4-2400 x8 UDIMM under steady issue).
+STANDARD_POWER_W = {
+    "RD": 1.30,
+    "WR": 1.25,
+    "ACT_PRE": 0.90,
+    "REF": 1.80,
+}
+
+
+def simra_power_w(n_act: int) -> float:
+    """Average power of an N-row SiMRA activation loop.
+
+    P(2) starts just above ACT_PRE; P(32) is pinned to REF * (1 - 0.2119).
+    Interpolation is linear in log2(N) (each predecoder split roughly
+    doubles asserted wordlines and their driver load).
+    """
+    if n_act < 2:
+        return STANDARD_POWER_W["ACT_PRE"]
+    import math
+
+    p2 = STANDARD_POWER_W["ACT_PRE"] * 1.05
+    p32 = STANDARD_POWER_W["REF"] * (1.0 + cal.SIMRA32_POWER_VS_REF)
+    w = (math.log2(n_act) - 1.0) / 4.0  # log2: 2 -> 0, 32 -> 1
+    return p2 + (p32 - p2) * min(max(w, 0.0), 1.0)
+
+
+def power_table() -> dict[str, float]:
+    """All Fig. 5 series in one dict (benchmark output)."""
+    out = dict(STANDARD_POWER_W)
+    for n in cal.N_ACT_LEVELS:
+        out[f"SIMRA_{n}"] = simra_power_w(n)
+    return out
+
+
+def energy_nj(op: str, duration_ns: float) -> float:
+    """Energy (nJ) of holding ``op`` power for ``duration_ns``."""
+    table = power_table()
+    return table[op] * duration_ns

@@ -1,0 +1,64 @@
+"""Elastic scaling: re-mesh surviving devices and reshard state.
+
+Flow on node loss (or scale-up): checkpoint (or live state) -> build a new
+mesh from the surviving device set -> recompute NamedShardings from the
+*same logical axes* -> device_put resharding -> resume.  Because shardings
+derive from logical axes, no per-tensor surgery is needed; the data
+pipeline is step-keyed so the batch stream continues exactly.
+
+`plan_remesh` chooses the largest (data x model) grid that preserves the
+model axis (TP degree is an algorithmic choice; DP shrinks with capacity).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist.sharding import AxisRules, DEFAULT_RULES, tree_shardings
+
+
+def plan_remesh(n_devices: int, model_parallel: int,
+                pods: int = 1) -> tuple[int, ...]:
+    """Largest usable (pods, data, model) grid on the surviving devices."""
+    if n_devices < model_parallel:
+        raise ValueError("fewer devices than the TP degree; cannot remesh")
+    per_pod = n_devices // max(pods, 1)
+    data = per_pod // model_parallel
+    if data < 1:
+        raise ValueError("not enough devices per pod for one data replica")
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def make_mesh_from(devices, shape: tuple[int, ...]) -> Mesh:
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    import numpy as np
+
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, names)
+
+
+def reshard(tree, axes_tree, new_mesh: Mesh,
+            rules: AxisRules = DEFAULT_RULES):
+    """Reshard a live pytree onto a new mesh (device_put with new specs)."""
+    shardings = tree_shardings(axes_tree, new_mesh, rules)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def elastic_restart(tree_like, axes_tree, ckpt_dir: str, devices,
+                    model_parallel: int, pods: int = 1,
+                    step: Optional[int] = None):
+    """Restore the latest checkpoint onto a fresh mesh over ``devices``."""
+    from repro.ckpt import checkpoint as ckpt
+
+    shape = plan_remesh(len(devices), model_parallel, pods)
+    mesh = make_mesh_from(devices, shape)
+    tree, found = ckpt.restore(tree_like, ckpt_dir, step)
+    return reshard(tree, axes_tree, mesh), mesh, found

@@ -1,0 +1,47 @@
+"""Straggler detection & mitigation.
+
+At pod scale the dominant mitigation is *not* per-op work stealing (SPMD
+steps are lockstep) but (a) detecting persistently slow workers and
+(b) re-meshing without them (see repro.ft.elastic), plus (c) bounded-delay
+step skipping for transient hiccups.  The detector keeps a per-worker EMA
+of step durations and flags workers whose EMA exceeds the fleet median by
+``threshold`` x; the trainer consults it every ``check_every`` steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    n_workers: int
+    alpha: float = 0.2
+    threshold: float = 1.5
+    ema: np.ndarray = None
+
+    def __post_init__(self):
+        if self.ema is None:
+            self.ema = np.zeros(self.n_workers)
+
+    def record(self, worker: int, step_time_s: float) -> None:
+        cur = self.ema[worker]
+        self.ema[worker] = (step_time_s if cur == 0
+                            else (1 - self.alpha) * cur + self.alpha * step_time_s)
+
+    def stragglers(self) -> list[int]:
+        active = self.ema[self.ema > 0]
+        if active.size < max(2, self.n_workers // 2):
+            return []
+        median = float(np.median(active))
+        return [int(i) for i in range(self.n_workers)
+                if self.ema[i] > self.threshold * median]
+
+    def fleet_slowdown(self) -> float:
+        """Step-time inflation caused by the slowest worker (lockstep SPMD)."""
+        active = self.ema[self.ema > 0]
+        if active.size == 0:
+            return 1.0
+        return float(active.max() / np.median(active))

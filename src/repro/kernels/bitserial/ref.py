@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused bit-serial adder kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitserial_add_ref(a_planes: jax.Array, b_planes: jax.Array) -> jax.Array:
+    """Ripple-carry addition over bit-planes, LSB-first along axis 0.
+
+    a/b: (NBITS, ...) uint32 packed planes.  Returns sum planes (NBITS, ...)
+    (carry-out discarded — fixed-width wraparound like uint arithmetic).
+    Each full adder is the §8.1 majority construction:
+      carry' = MAJ3(a, b, c);  sum = a ^ b ^ c.
+    """
+    a = jnp.asarray(a_planes, jnp.uint32)
+    b = jnp.asarray(b_planes, jnp.uint32)
+    nbits = a.shape[0]
+    c = jnp.zeros_like(a[0])
+    outs = []
+    for i in range(nbits):
+        s = a[i] ^ b[i] ^ c
+        c = (a[i] & b[i]) | (b[i] & c) | (a[i] & c)
+        outs.append(s)
+    return jnp.stack(outs)

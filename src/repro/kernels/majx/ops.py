@@ -1,0 +1,66 @@
+"""jit'd public wrapper for the bulk MAJX kernel (+ TMR vote entry point)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanes as bp
+from repro.kernels.majx.kernel import majx_pallas
+from repro.kernels.majx.ref import majx_ref
+
+_VPU_R, _VPU_C = 8, 128
+
+
+def _pad_to(x: jax.Array, r_mult: int, c_mult: int) -> tuple[jax.Array, int, int]:
+    n, r, c = x.shape
+    pr = (-r) % r_mult
+    pc = (-c) % c_mult
+    if pr or pc:
+        x = jnp.pad(x, ((0, 0), (0, pr), (0, pc)))
+    return x, r, c
+
+
+def majx(planes: jax.Array, *, interpret: bool = True,
+         block_r: int = 8, block_c: int = 512) -> jax.Array:
+    """Bulk MAJX over (N, R, C) packed uint32 planes -> (R, C).
+
+    Pads to VPU-aligned tiles, dispatches the Pallas kernel, crops.
+    ``interpret=True`` is the validated CPU path; on real TPUs pass False.
+    """
+    planes = jnp.asarray(planes, jnp.uint32)
+    if planes.ndim == 2:
+        planes = planes[:, None, :]
+        squeeze = True
+    else:
+        squeeze = False
+    block_c = max(_VPU_C, min(block_c, 4096))
+    padded, r, c = _pad_to(planes, block_r, block_c)
+    out = majx_pallas(padded, block_r=block_r, block_c=block_c,
+                      interpret=interpret)[:r, :c]
+    return out[0] if squeeze else out
+
+
+def vote(replicas, *, interpret: bool = True):
+    """TMR/XMR vote over replicas of an arbitrary fixed-width array.
+
+    Bitcasts each replica to packed words, majority-votes them through the
+    MAJX kernel, and bitcasts back (see repro.pud.tmr for the digital
+    oracle used in tests).
+    """
+    words, shape, dtype = None, None, None
+    stacked = []
+    for rep in replicas:
+        w, shape, dtype = bp.bitcast_to_planes(rep)
+        stacked.append(w)
+    words = jnp.stack(stacked)  # (X, n_words)
+    n = words.shape[0]
+    c = words.shape[1]
+    rows = -(-c // 4096)
+    pad = rows * 4096 - c
+    planes = jnp.pad(words, ((0, 0), (0, pad))).reshape(n, rows, 4096)
+    voted = majx(planes, interpret=interpret).reshape(-1)[:c]
+    return bp.bitcast_from_planes(voted, shape, dtype)
+
+
+__all__ = ["majx", "vote", "majx_ref"]

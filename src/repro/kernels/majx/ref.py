@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the bulk MAJX kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def majx_ref(planes: jax.Array) -> jax.Array:
+    """Bitwise majority across axis 0 of packed uint32 planes.
+
+    planes: (N, ...) uint32, N odd.  Returns (...) uint32 where each output
+    bit is 1 iff more than N/2 of the stacked bits are 1 — the charge-share
+    semantics of an N-row activation (paper §5).
+    """
+    planes = jnp.asarray(planes, jnp.uint32)
+    n = planes.shape[0]
+    if n % 2 == 0:
+        raise ValueError("MAJX needs odd N")
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)
+    count = jnp.sum(bits.astype(jnp.int32), axis=0)
+    out = (2 * count > n).astype(jnp.uint32)
+    return jnp.sum(out << shifts, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused XOR + popcount reduction (success-rate counter).
+
+The characterization harness (§3-§6) compares millions of read-back cells
+against expected data per trial; the hot loop is "count differing bits".
+The kernel fuses XOR, SWAR popcount, and a grid-carried scalar reduction:
+each (BR, BC) block contributes its partial sum into a single accumulator
+block that every grid step maps to, so HBM sees the operands exactly once
+and one int32 comes back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def mismatch_kernel(g_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = g_ref[...] ^ w_ref[...]
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    partial = jnp.sum(per_word, dtype=jnp.int32)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[0, 0] = 0
+
+    o_ref[0, 0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c", "interpret"))
+def mismatch_pallas(
+    got: jax.Array,
+    want: jax.Array,
+    *,
+    block_r: int = 8,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    r, c = got.shape
+    grid = (pl.cdiv(r, block_r), pl.cdiv(c, block_c))
+    spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
+    return pl.pallas_call(
+        mismatch_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(got, want)[0, 0]

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the mismatch/success-rate kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mismatch.kernel import mismatch_pallas
+from repro.kernels.mismatch.ref import mismatch_count_ref
+
+
+def mismatch_count(got: jax.Array, want: jax.Array, *,
+                   interpret: bool = True) -> jax.Array:
+    """Number of differing bits between packed arrays of any shape."""
+    g = jnp.asarray(got, jnp.uint32).reshape(-1)
+    w = jnp.asarray(want, jnp.uint32).reshape(-1)
+    c = g.shape[0]
+    width = 512
+    rows = -(-c // width)
+    pad = rows * width - c
+    g2 = jnp.pad(g, (0, pad)).reshape(rows, width)
+    w2 = jnp.pad(w, (0, pad)).reshape(rows, width)
+    return mismatch_pallas(g2, w2, interpret=interpret)
+
+
+def success_rate(got, want, n_bits: int | None = None, *,
+                 interpret: bool = True) -> float:
+    g = jnp.asarray(got, jnp.uint32)
+    total = int(n_bits) if n_bits else g.size * 32
+    bad = int(mismatch_count(got, want, interpret=interpret))
+    return 1.0 - bad / total
+
+
+__all__ = ["mismatch_count", "success_rate", "mismatch_count_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the mismatch-count (success-rate) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mismatch_count_ref(got: jax.Array, want: jax.Array) -> jax.Array:
+    """Total number of differing bits between two packed-plane arrays."""
+    g = jnp.asarray(got, jnp.uint32)
+    w = jnp.asarray(want, jnp.uint32)
+    x = g ^ w
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    return jnp.sum(per_word, dtype=jnp.int32)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the Multi-RowCopy fan-out kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rowcopy.kernel import fanout_pallas
+from repro.kernels.rowcopy.ref import fanout_ref
+
+
+def fanout(src: jax.Array, fanout_n: int, *, interpret: bool = True,
+           block_r: int = 8, block_c: int = 512) -> jax.Array:
+    """Broadcast (R, C) -> (fanout_n, R, C), Multi-RowCopy style."""
+    src = jnp.asarray(src)
+    squeeze = src.ndim == 1
+    if squeeze:
+        src = src[None, :]
+    r, c = src.shape
+    pr, pc = (-r) % block_r, (-c) % block_c
+    if pr or pc:
+        src = jnp.pad(src, ((0, pr), (0, pc)))
+    out = fanout_pallas(src, fanout=fanout_n, block_r=block_r,
+                        block_c=block_c, interpret=interpret)[:, :r, :c]
+    return out[:, 0, :] if squeeze else out
+
+
+__all__ = ["fanout", "fanout_ref"]

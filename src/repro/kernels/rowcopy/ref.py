@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fan-out row-copy kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fanout_ref(src: jax.Array, fanout: int) -> jax.Array:
+    """Broadcast a (R, C) source block to (fanout, R, C) — Multi-RowCopy."""
+    src = jnp.asarray(src)
+    return jnp.broadcast_to(src[None], (fanout, *src.shape))

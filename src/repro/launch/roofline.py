@@ -1,0 +1,267 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Sources & methodology (CPU container, TPU v5e-like target):
+
+* ``compiled.cost_analysis()`` supplies FLOPs / bytes-accessed — but XLA
+  counts a ``while`` body ONCE, so scanned layers and streaming-attention
+  chunks would be undercounted ~L x.  We therefore lower *cost-mode*
+  variants (dense attention forced; see models/attention.FORCE_DENSE) at
+  composition points and combine:
+      transformers:  C(L) = C0 + L * (C1 - C0)
+      hybrid/zamba:  body = C(a+1) - C(a);  attn = C(a) - C0 - body
+                     C = C0 + n_layers*body + n_full*attn     (a=attn_every)
+      ssm/xlstm:     C(S) is linear in S (recurrent):  fit at S=64,128
+* collective bytes are parsed from the *deploy* compile's optimized HLO:
+  every all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute
+  op contributes its wire bytes (all-reduce 2x operand for ring R-S+A-G;
+  all-gather its result), multiplied by the layer trip count when the op
+  lives inside the scan body (op_name metadata contains "/while/").
+* ``memory_analysis()`` of the deploy compile proves per-chip fit.
+
+Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"(\((?:[a-z0-9]+\[[0-9,]*\][^)]*)\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: float
+    n_ops: int
+
+    @property
+    def dominant(self) -> str:
+        if not self.bytes_by_kind:
+            return "none"
+        return max(self.bytes_by_kind, key=self.bytes_by_kind.get)
+
+
+def collective_bytes(hlo_text: str, loop_multiplier: int = 1,
+                     loop_trips: Optional[list] = None) -> CollectiveStats:
+    """Sum wire bytes of collectives in optimized HLO (per-chip program).
+
+    Ops inside while bodies (op_name metadata contains "/while/") get
+    multiplied by the enclosing trip counts: ``loop_trips`` is an
+    outer-to-inner list (e.g. [microbatches, n_layers]); an op nested under
+    ``n`` whiles multiplies by ``prod(loop_trips[:n])``.  The legacy
+    ``loop_multiplier`` is shorthand for ``loop_trips=[loop_multiplier]``.
+    """
+    if loop_trips is None:
+        loop_trips = [loop_multiplier]
+    by_kind: dict[str, float] = {}
+    n = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count the -start, not the -done
+        shape_txt, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_txt)
+        if kind == "all-reduce":
+            nbytes *= 2  # ring reduce-scatter + all-gather
+        depth = line.count("/while/")
+        op_m = re.search(r'op_name="([^"]*)"', line)
+        if op_m:
+            depth = op_m.group(1).count("while/")
+        # deeper nesting than provided trips (e.g. attention chunk loops)
+        # conservatively multiplies by 1 — those loops carry no collectives
+        # in our programs.
+        mult = 1
+        for trip in loop_trips[:depth]:
+            mult *= trip
+        by_kind[kind] = by_kind.get(kind, 0.0) + nbytes * mult
+        n += 1
+    return CollectiveStats(by_kind, sum(by_kind.values()), n)
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (the MODEL_FLOPS row of the table)
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training (2*N_active*D inference) + attention."""
+    n_active = cfg.n_active_params()
+    gb, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = gb * s
+        base = 6 * n_active * tokens
+        mult = 3  # fwd + bwd
+    elif shape.kind == "prefill":
+        tokens = gb * s
+        base = 2 * n_active * tokens
+        mult = 1
+    else:  # decode: one token against an s-long context
+        tokens = gb
+        base = 2 * n_active * tokens
+        mult = 1
+
+    attn = 0.0
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        n_attn_layers = cfg.n_layers
+    elif cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // max(cfg.attn_every, 1)
+    else:
+        n_attn_layers = 0
+    if n_attn_layers:
+        h, hd = cfg.n_heads, cfg.hd
+        if shape.kind == "decode":
+            ctx = min(s, cfg.sliding_window) if cfg.sliding_window else s
+            attn = 4 * gb * ctx * h * hd * n_attn_layers  # QK + PV
+        else:
+            eff = min(s, cfg.sliding_window) if cfg.sliding_window else s
+            # causal halves the S x S_eff score work
+            attn = (4 * gb * s * eff * h * hd / 2) * n_attn_layers * mult
+    return float(base + attn)
+
+
+# ---------------------------------------------------------------------------
+# composition of cost-mode measurements
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CostPoint:
+    flops: float
+    bytes_accessed: float
+
+
+def compose(cfg, points: dict[int, CostPoint]) -> CostPoint:
+    """Combine cost-mode compile points into the full-depth estimate."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        c0, c1 = points[0], points[1]
+        return CostPoint(
+            flops=c0.flops + cfg.n_layers * (c1.flops - c0.flops),
+            bytes_accessed=c0.bytes_accessed
+            + cfg.n_layers * (c1.bytes_accessed - c0.bytes_accessed))
+    if cfg.family == "hybrid":
+        a = cfg.attn_every
+        c0, ca, ca1 = points[0], points[a], points[a + 1]
+        body_f = ca1.flops - ca.flops
+        body_b = ca1.bytes_accessed - ca.bytes_accessed
+        attn_f = ca.flops - c0.flops - body_f
+        attn_b = ca.bytes_accessed - c0.bytes_accessed - body_b
+        n_full = cfg.n_layers // a
+        return CostPoint(
+            flops=c0.flops + cfg.n_layers * body_f + n_full * attn_f,
+            bytes_accessed=(c0.bytes_accessed + cfg.n_layers * body_b
+                            + n_full * attn_b))
+    raise ValueError(f"no composition rule for family {cfg.family}")
+
+
+def compose_seq(s_target: int, s_points: dict[int, CostPoint]) -> CostPoint:
+    """Linear-in-S fit for recurrent (ssm) families."""
+    (s1, c1), (s2, c2) = sorted(s_points.items())
+    df = (c2.flops - c1.flops) / (s2 - s1)
+    db = (c2.bytes_accessed - c1.bytes_accessed) / (s2 - s1)
+    return CostPoint(flops=c1.flops + df * (s_target - s1),
+                     bytes_accessed=c1.bytes_accessed + db * (s_target - s1))
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_dominant_kind: str
+    model_flops_global: float
+    mem_per_chip_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction: time the compute term would take at
+        peak vs the dominant term (1.0 = perfectly compute-bound at peak
+        with ideal HLO)."""
+        t_ideal = self.model_flops_global / self.n_chips / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_bound if t_bound > 0 else 0.0
+
+    @property
+    def hlo_efficiency(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundant compute."""
+        total_hlo = self.flops_per_chip * self.n_chips
+        return self.model_flops_global / total_hlo if total_hlo else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "roofline_fraction": self.roofline_fraction,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_global": self.flops_per_chip * self.n_chips,
+            "hlo_efficiency": self.hlo_efficiency,
+            "coll_dominant": self.coll_dominant_kind,
+            "mem_per_chip_gb": self.mem_per_chip_bytes / 2**30,
+        }

@@ -1,0 +1,137 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+Everything here is allocation-free: specs are ShapeDtypeStructs (via
+eval_shape), shardings come from the logical-axis rules.  The dry-run
+lowers
+
+    train_step(state, batch)            for train shapes
+    prefill_step(params, batch)         for prefill shapes
+    decode_step(params, tokens, cache)  for decode shapes (incl. long_500k)
+
+with caches sized to the shape's context length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import sharding_for, tree_shardings
+from repro.models import model as M
+from repro.models.attention import KVCache
+from repro.optim import adamw
+from repro.optim import compression as comp
+from repro.train.step import TrainState
+
+
+def _dp_axes(mesh: Mesh, batch: int | None = None):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch is not None:
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        if batch % extent != 0:
+            return ()  # e.g. long_500k's global_batch=1: replicate
+    return axes
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                with_labels: bool):
+    dp = _dp_axes(mesh, shape.global_batch)
+    gb, s = shape.global_batch, shape.seq_len
+    tok_shape = (gb, s, cfg.n_codebooks) if cfg.family == "audio" else (gb, s)
+    specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    shardings = {"tokens": NamedSharding(mesh, P(dp))}
+    if with_labels:
+        specs["labels"] = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+        shardings["labels"] = NamedSharding(mesh, P(dp))
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (gb, cfg.n_patches, cfg.d_model), jnp.float32)
+        shardings["patches"] = NamedSharding(mesh, P(dp, None, None))
+    return specs, shardings
+
+
+def params_specs(cfg: ModelConfig, mesh: Mesh):
+    abstract, axes = M.init_abstract(cfg)
+    return abstract, tree_shardings(axes, mesh), axes
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh):
+    """Abstract TrainState + shardings (ZeRO: opt state mirrors params)."""
+    params_abs, param_axes = M.init_abstract(cfg)
+
+    def mk_opt(p):
+        return adamw.init_state(p)
+
+    opt_abs = jax.eval_shape(mk_opt, params_abs)
+    fb_abs = jax.eval_shape(lambda p: comp.init_feedback(p), params_abs)
+    abstract = TrainState(params=params_abs, opt=opt_abs, feedback=fb_abs)
+    st_axes = TrainState(params=param_axes,
+                         opt=adamw.state_axes(param_axes),
+                         feedback=comp.ErrorFeedback(param_axes))
+    return abstract, tree_shardings(st_axes, mesh), st_axes
+
+
+def cache_axes_tree(cfg: ModelConfig, cache_abstract: M.ServeCache):
+    """Logical axes matching a ServeCache structure.
+
+    KV caches: batch over dp, head_dim over tp (head_dim is divisible by
+    the TP degree for every assigned arch, and the dynamic-position cache
+    update touches only the *unsharded* seq dim — no resharding on decode).
+    Mamba states: heads over tp.  xLSTM states: batch only (125M model).
+    """
+    def kv_axes(stacked: bool):
+        lead = (None,) if stacked else ()
+        return KVCache(k=lead + ("kv_batch", None, None, "tp"),
+                       v=lead + ("kv_batch", None, None, "tp"),
+                       pos=lead + ("kv_batch",))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return M.ServeCache(kv_axes(stacked=True), None)
+    if cfg.family == "hybrid":
+        from repro.models.mamba2 import MambaState
+
+        m_axes = [MambaState(h=(None, "kv_batch", "tp", None, None),
+                             conv=(None, "kv_batch", None, "tp"))
+                  for _ in cache_abstract.layers]
+        a_axes = [kv_axes(stacked=False) for _ in (cache_abstract.extra or [])]
+        return M.ServeCache(m_axes, a_axes)
+    if cfg.family == "ssm":
+        from repro.models.xlstm import MLSTMState, SLSTMState
+
+        axes = []
+        for st in cache_abstract.layers:
+            if isinstance(st, MLSTMState):
+                axes.append(MLSTMState(c=("kv_batch", None, None, None),
+                                       n=("kv_batch", None, None),
+                                       m=("kv_batch", None)))
+            else:
+                axes.append(SLSTMState(
+                    c=("kv_batch", None), n=("kv_batch", None),
+                    h=("kv_batch", None), m=("kv_batch", None)))
+        return M.ServeCache(axes, None)
+    raise ValueError(cfg.family)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(tok_spec, cache_spec, tok_sharding, cache_sharding) for decode."""
+    dp = _dp_axes(mesh, shape.global_batch)
+    gb = shape.global_batch
+    tshape = (gb, 1, cfg.n_codebooks) if cfg.family == "audio" else (gb, 1)
+    tok_spec = jax.ShapeDtypeStruct(tshape, jnp.int32)
+    tok_shard = sharding_for(tshape, ("batch",) + (None,) * (len(tshape) - 1),
+                             mesh)
+    cache_abs = jax.eval_shape(lambda: M.fresh_cache(cfg, gb, shape.seq_len))
+    axes = cache_axes_tree(cfg, cache_abs)
+    if not dp:  # tiny global batch (long_500k): replicate the batch dim
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+        axes = jax.tree.map(
+            lambda t: tuple(None if a in ("batch", "kv_batch") else a
+                            for a in t),
+            axes, is_leaf=is_axes)
+    cache_shard = tree_shardings(axes, mesh)
+    return tok_spec, cache_abs, tok_shard, cache_shard

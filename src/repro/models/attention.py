@@ -1,0 +1,361 @@
+"""Causal attention: MHA / GQA / MQA, sliding window, RoPE, KV cache.
+
+Three execution paths, all numerically cross-checked in tests:
+* dense path (train / short prefill): one einsum chain;
+* **streaming path** (long prefill): nested q-chunk x kv-chunk scan with a
+  running-max softmax (flash-attention recurrence in pure lax), bounding
+  activation memory at O(q_chunk x kv_chunk) per step — required for the
+  32k/500k shapes on 16 GB chips;
+* decode path: single-token query against the cache (+ rolling window
+  cache for SWA archs, which is what makes long_500k run on Mixtral).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import axis_extent, constraint
+from repro.models.common import dense_init
+
+NEG_INF = -2.0e38
+
+#: Roofline cost-mode hook: forces the dense (non-streaming) attention path
+#: so XLA cost analysis sees the full S^2 work (scan bodies are counted
+#: once by XLA's analysis; see launch/roofline.py for the methodology).
+FORCE_DENSE = False
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / partial "2d")
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, rot_dim: int, theta: float):
+    """positions: (..., S) int32 -> cos/sin tables (..., S, rot_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, rot_dim: int):
+    """x: (B, S, H, D); rotates the first rot_dim dims (GLM partial RoPE
+    keeps the tail un-rotated when rotary_pct < 1)."""
+    rot, rest = x[..., :rot_dim], x[..., rot_dim:]
+    r1, r2 = rot[..., 0::2], rot[..., 1::2]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    o1 = r1 * c - r2 * s
+    o2 = r2 * c + r1 * s
+    rot_out = jnp.stack([o1, o2], axis=-1).reshape(rot.shape).astype(x.dtype)
+    return jnp.concatenate([rot_out, rest], axis=-1) if rest.shape[-1] else rot_out
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d, (d, h * hd), dt),
+        "wk": dense_init(ks[1], d, (d, kvh * hd), dt),
+        "wv": dense_init(ks[2], d, (d, kvh * hd), dt),
+        "wo": dense_init(ks[3], h * hd, (h * hd, d), dt),
+    }
+    axes = {
+        "wq": ("fsdp", "tp"),
+        "wk": ("fsdp", "tp"),
+        "wv": ("fsdp", "tp"),
+        "wo": ("tp", "fsdp"),
+    }
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos, k_pos, window: int):
+    """(..., Sq, Sk) additive bias: causal (+ sliding window)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# dense path
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k, h):
+    """(B,S,KVH,D) -> (B,S,H,D): GQA group broadcast, TP-cleanly sharded.
+
+    Keeping the einsums on *flat* heads (rather than a (kvh, g) split)
+    lets the TP axis shard the head dim evenly even when kvh < TP degree
+    (chatglm/glm have kvh=2 on a 16-way model axis); the repeat is a
+    broadcast XLA keeps fused and costs no HBM for the weights.
+    """
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    return jnp.repeat(k, h // kvh, axis=2)
+
+
+def _attn_shard_mode(h: int) -> str:
+    """"heads" TP when the head count divides the TP extent, else
+    sequence-parallel attention (Ulysses-style): q/scores shard the query
+    sequence dim and k/v replicate — works for any head count (deepseek's
+    56 and musicgen's 24 heads don't divide a 16-way model axis)."""
+    tp = axis_extent("tp")
+    return "heads" if h % max(tp, 1) == 0 else "seq"
+
+
+def _attend_dense(q, k, v, q_pos, k_pos, cfg: ModelConfig):
+    """q: (B,Sq,H,D)  k/v: (B,Sk,KVH,D) -> (B,Sq,H,D)."""
+    b, sq, h, hd = q.shape
+    mode = _attn_shard_mode(h)
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    if mode == "heads":
+        k = constraint(k, ("batch", None, "tp", None))
+        v = constraint(v, ("batch", None, "tp", None))
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    bias = _mask_bias(q_pos, k_pos, cfg.sliding_window)
+    scores = scores + bias[:, None]
+    if mode == "heads":
+        scores = constraint(scores, ("batch", "tp", None, None))
+    else:
+        scores = constraint(scores, ("batch", None, "sp", None))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    if mode == "heads":
+        return constraint(out, ("batch", None, "tp", None))
+    return constraint(out, ("batch", "sp", None, None))
+
+
+# ---------------------------------------------------------------------------
+# streaming (flash-style) path for long sequences
+# ---------------------------------------------------------------------------
+
+
+def _attend_streaming(q, k, v, q_pos, k_pos, cfg: ModelConfig,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash-style nested-chunk attention on flat (TP-sharded) heads.
+
+    With head counts that don't divide TP, the q-chunk grid dim shards
+    over ``sp`` instead (sequence-parallel attention).
+    """
+    b, s, h, hd = q.shape
+    mode = _attn_shard_mode(h)
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    if mode == "heads":
+        k = constraint(k, ("batch", None, "tp", None))
+        v = constraint(v, ("batch", None, "tp", None))
+    # chunk sizes must divide s (e.g. phi3v prefill: 32768 tokens + 576
+    # patch embeddings = 33344 = 64 * 521)
+    def _div_chunk(want: int) -> int:
+        c = min(want, s)
+        while s % c:
+            c -= 1
+        return c
+
+    q_chunk = _div_chunk(q_chunk)
+    kv_chunk = _div_chunk(kv_chunk)
+    nq = s // q_chunk
+    nk = s // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    q_r = q.reshape(b, nq, q_chunk, h, hd)
+    qp_r = q_pos.reshape(b, nq, q_chunk)
+    k_r = k.reshape(b, nk, kv_chunk, h, hd)
+    v_r = v.reshape(b, nk, kv_chunk, h, hd)
+    kp_r = k_pos.reshape(b, nk, kv_chunk)
+
+    def q_step(_, qi):
+        qc, qpc = qi  # (b, qc, h, hd), (b, qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, kpc = ki
+            s_ = jnp.einsum("bqhd,bshd->bhqs", qc, kc).astype(jnp.float32)
+            s_ = s_ * scale + _mask_bias(qpc, kpc, cfg.sliding_window)[:, None]
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(qc.dtype), vc).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k_r.swapaxes(0, 1), v_r.swapaxes(0, 1), kp_r.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b, h, qc, hd) -> (b, qc, h, hd)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (q_r.swapaxes(0, 1), qp_r.swapaxes(0, 1)))
+    # (nq, b, qc, h, hd) -> (b, s, h, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer cache.  For SWA archs the buffer is a rolling window."""
+
+    k: jax.Array  # (B, S_buf, KVH, HD)
+    v: jax.Array
+    pos: jax.Array  # (B,) next absolute position
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    buf = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.compute_dtype
+    return KVCache(
+        k=jnp.zeros((batch, buf, kvh, hd), dt),
+        v=jnp.zeros((batch, buf, kvh, hd), dt),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_axes() -> KVCache:
+    return KVCache(k=("batch", None, None, "tp"),
+                   v=("batch", None, None, "tp"),
+                   pos=("batch",))
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def attention_forward(params, x, positions, cfg: ModelConfig,
+                      streaming_threshold: int = 8192):
+    """Training/prefill attention over a full sequence."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kvh, hd)
+    v = (x @ params["wv"]).reshape(b, s, kvh, hd)
+    rot = int(cfg.rotary_pct * hd) // 2 * 2
+    if rot:
+        cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    if _attn_shard_mode(h) == "heads":
+        q = constraint(q, ("batch", None, "tp", None))
+    else:
+        q = constraint(q, ("batch", "sp", None, None))
+    if s > streaming_threshold and not FORCE_DENSE:
+        out = _attend_streaming(q, k, v, positions, positions, cfg)
+    else:
+        out = _attend_dense(q, k, v, positions, positions, cfg)
+    return out.reshape(b, s, h * hd) @ params["wo"]
+
+
+def attention_decode(params, x, cache: KVCache, cfg: ModelConfig):
+    """Single-token decode step; x: (B, 1, D).  Returns (out, new_cache)."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, 1, h, hd)
+    k = (x @ params["wk"]).reshape(b, 1, kvh, hd)
+    v = (x @ params["wv"]).reshape(b, 1, kvh, hd)
+    pos = cache.pos  # (B,)
+    rot = int(cfg.rotary_pct * hd) // 2 * 2
+    if rot:
+        cos, sin = rope_tables(pos[:, None], rot, cfg.rope_theta)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    # Keep the single-token q/k/v on the cache's batch sharding: resharding
+    # the (B, 1, ...) activations is KBs, gathering the cache would be GBs.
+    q = constraint(q, ("kv_batch", None, None, None))
+    k = constraint(k, ("kv_batch", None, None, None))
+    v = constraint(v, ("kv_batch", None, None, None))
+    buf = cache.k.shape[1]
+    if cfg.sliding_window:
+        slot = pos % buf
+    else:
+        slot = jnp.minimum(pos, buf - 1)
+    bidx = jnp.arange(b)
+    k_buf = cache.k.at[bidx, slot].set(k[:, 0])
+    v_buf = cache.v.at[bidx, slot].set(v[:, 0])
+    # absolute positions held in each cache slot (rolling for SWA)
+    slots = jnp.arange(buf)[None, :]
+    if cfg.sliding_window:
+        # slot s holds position: the latest p <= pos with p % buf == s
+        cur = pos[:, None]
+        k_pos = cur - ((cur - slots) % buf)
+    else:
+        k_pos = jnp.broadcast_to(slots, (b, buf))
+    valid = k_pos <= pos[:, None]
+    # invalid/empty slots get a +huge sentinel so the causal mask
+    # (k_pos <= q_pos) rejects them (a negative sentinel would pass it
+    # and leak softmax mass onto zeroed cache slots)
+    k_pos = jnp.where(valid, k_pos, 1_000_000_000)
+    kr = _repeat_kv(k_buf, h)
+    vr = _repeat_kv(v_buf, h)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, kr).astype(jnp.float32)
+    scores *= 1.0 / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    bias = _mask_bias(pos[:, None], k_pos, cfg.sliding_window)
+    scores = scores + bias[:, None]
+    scores = constraint(scores, ("kv_batch", None, None, None))
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, vr).reshape(b, 1, h * hd)
+    out = constraint(out, ("kv_batch", None, None))
+    new_cache = KVCache(k=k_buf, v=v_buf, pos=pos + 1)
+    return out @ params["wo"], new_cache
+
+
+def prefill_cache(params, x, positions, cfg: ModelConfig, max_seq: int):
+    """Full-sequence prefill that also materializes the cache."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = attention_forward(params, x, positions, cfg)
+    k = (x @ params["wk"]).reshape(b, s, kvh, hd)
+    v = (x @ params["wv"]).reshape(b, s, kvh, hd)
+    rot = int(cfg.rotary_pct * hd) // 2 * 2
+    if rot:
+        cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+        k = apply_rope(k, cos, sin, rot)
+    cache = init_cache(cfg, b, max_seq)
+    buf = cache.k.shape[1]
+    take = min(s, buf)
+    # Rolling-window alignment: position p lives in slot p % buf, so the
+    # trailing window is written then rolled by (s - take) % buf (zero for
+    # the full-cache case where slot == position).
+    shift = (s - take) % buf
+    k_buf = jax.lax.dynamic_update_slice_in_dim(cache.k, k[:, -take:], 0, axis=1)
+    v_buf = jax.lax.dynamic_update_slice_in_dim(cache.v, v[:, -take:], 0, axis=1)
+    if shift:
+        k_buf = jnp.roll(k_buf, shift, axis=1)
+        v_buf = jnp.roll(v_buf, shift, axis=1)
+    cache = KVCache(k=k_buf, v=v_buf, pos=jnp.full((b,), s, jnp.int32))
+    return out, cache

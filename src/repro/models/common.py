@@ -1,0 +1,59 @@
+"""Shared model components: norms, initializers, parameter plumbing.
+
+Parameter convention: params are nested dicts of arrays; every init
+function returns ``(params, axes)`` where ``axes`` mirrors the params tree
+with tuples of *logical* sharding axes (see repro.dist.sharding).  Layer
+stacks are stacked along a leading axis for ``lax.scan`` and get ``None``
+prepended to their logical axes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Axes = tuple
+
+
+def dense_init(key, fan_in: int, shape, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype, scale: float = 0.02) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def act_fn(name: str) -> Callable:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def stack_params(param_list, axes):
+    """Stack per-layer param trees along a new leading (scan) axis."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *param_list)
+    stacked_axes = jax.tree.map(
+        lambda a: (None,) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x),
+    )
+    return stacked, stacked_axes
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) mixer: chunked selective-state-space recurrence.
+
+Implements the Mamba-2 scalar-decay-per-head SSM (arXiv:2405.21060) with the
+chunked SSD algorithm: within a chunk the quadratic (attention-like) form,
+across chunks the state recurrence — so activation memory is
+O(chunk^2 + d_state) instead of O(S * d_state) and the 500k-token shape
+streams.  Decode is a single O(1) state update.
+
+State per head: h in R^{head_dim x d_state};  per step t:
+    h_t = a_t * h_{t-1} + dt_t * x_t (x) B_t      (a_t = exp(-dt_t * A))
+    y_t = h_t @ C_t + D * x_t,   gated by silu(z_t)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array        # (B, H, P, N) SSM state
+    conv: jax.Array     # (B, K-1, D_inner + 2N) conv tail
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.n_heads
+    p = d_inner // n_heads
+    return d_inner, n_heads, p, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nh, p, n = _dims(cfg)
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * n
+    params = {
+        # projects to [z (d_inner), x (d_inner), B (n), C (n), dt (nh)]
+        "w_in": dense_init(ks[0], d, (d, 2 * d_inner + 2 * n + nh), dt),
+        "conv_w": dense_init(ks[1], cfg.ssm_conv, (cfg.ssm_conv, conv_ch), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "w_out": dense_init(ks[2], d_inner, (d_inner, d), dt),
+    }
+    axes = {
+        "w_in": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "w_out": ("tp", "fsdp"),
+    }
+    return params, axes
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, nh, p, n = _dims(cfg)
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    b = proj[..., 2 * d_inner:2 * d_inner + n]
+    c = proj[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt_raw = proj[..., 2 * d_inner + 2 * n:]
+    return z, x, b, c, dt_raw
+
+
+def _causal_conv(xbc, conv_w, tail=None):
+    """Depthwise causal conv over (B, S, CH); tail = (B, K-1, CH) history."""
+    k = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([tail, xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    new_tail = padded[:, -(k - 1):] if k > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, state: MambaState | None = None):
+    """Full-sequence forward; returns (y, final_state).
+
+    x: (B, S, D).  S must be a multiple of cfg.ssm_chunk (callers pad).
+    """
+    bsz, s, _ = x.shape
+    d_inner, nh, p, n = _dims(cfg)
+    ch = cfg.ssm_chunk
+    nchunks = s // ch
+
+    proj = x @ params["w_in"]
+    z, xin, b, c, dt_raw = _split_proj(proj, cfg)
+    xbc, new_tail = _causal_conv(
+        jnp.concatenate([xin, b, c], axis=-1), params["conv_w"],
+        None if state is None else state.conv)
+    xin, b, c = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + n],
+                 xbc[..., d_inner + n:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])          # (B,S,H)
+    a = -jnp.exp(params["a_log"])                       # (H,)
+    loga = dt * a                                       # (B,S,H) log decay
+    xh = xin.reshape(bsz, s, nh, p)
+
+    # chunked SSD
+    loga_c = loga.reshape(bsz, nchunks, ch, nh)
+    dt_c = dt.reshape(bsz, nchunks, ch, nh)
+    x_c = xh.reshape(bsz, nchunks, ch, nh, p)
+    b_c = b.reshape(bsz, nchunks, ch, n).astype(jnp.float32)
+    c_c = c.reshape(bsz, nchunks, ch, n).astype(jnp.float32)
+
+    h0 = (jnp.zeros((bsz, nh, p, n), jnp.float32)
+          if state is None else state.h)
+
+    def chunk_step(h, inp):
+        la, dtk, xk, bk, ck = inp  # (B,ch,H), (B,ch,H), (B,ch,H,P), (B,ch,N)x2
+        cum = jnp.cumsum(la, axis=1)                    # (B,ch,H)
+        # inter-chunk: y_t += (prod decay to t) * C_t . h0
+        y_inter = jnp.einsum("btn,bhpn->bthp", ck, h)
+        y_inter = y_inter * jnp.exp(cum).transpose(0, 1, 2)[..., None]
+        # intra-chunk quadratic form
+        # L[t,s] = exp(cum_t - cum_s) for s <= t  (per head)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]   # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((ch, ch), bool))
+        L = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        g = jnp.einsum("btn,bsn->bts", ck, bk)          # (B,t,s)
+        dx = xk.astype(jnp.float32) * dtk[..., None]    # (B,s,H,P)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", g, L, dx)
+        # state update: h' = exp(sum la) h + sum_s exp(cum_end - cum_s) dx_s B_s
+        tot = cum[:, -1]                                # (B,H)
+        w = jnp.exp(tot[:, None] - cum)                 # (B,s,H)
+        h_new = jnp.exp(tot)[..., None, None] * h + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", dx, bk, w)
+        return h_new, (y_inter + y_intra)
+
+    h_final, y_chunks = jax.lax.scan(
+        chunk_step, h0,
+        (loga_c.swapaxes(0, 1), dt_c.swapaxes(0, 1), x_c.swapaxes(0, 1),
+         b_c.swapaxes(0, 1), c_c.swapaxes(0, 1)))
+    y = y_chunks.transpose(1, 0, 2, 3, 4).reshape(bsz, s, nh, p)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(bsz, s, d_inner)
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, MambaState(h=h_final, conv=new_tail)
+
+
+def mamba2_decode(params, x, cfg: ModelConfig, state: MambaState):
+    """Single-token step; x: (B, 1, D)."""
+    bsz = x.shape[0]
+    d_inner, nh, p, n = _dims(cfg)
+    proj = x @ params["w_in"]
+    z, xin, b, c, dt_raw = _split_proj(proj, cfg)
+    xbc, new_tail = _causal_conv(
+        jnp.concatenate([xin, b, c], axis=-1), params["conv_w"], state.conv)
+    xin, b, c = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + n],
+                 xbc[..., d_inner + n:])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                              # (B,H)
+    xh = xin.reshape(bsz, nh, p).astype(jnp.float32)
+    bf = b[:, 0].astype(jnp.float32)
+    cf = c[:, 0].astype(jnp.float32)
+    h = decay[..., None, None] * state.h + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, bf, dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, cf)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.astype(x.dtype).reshape(bsz, 1, d_inner)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], MambaState(h=h, conv=new_tail)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_inner, nh, p, n = _dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, nh, p, n), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, d_inner + 2 * n),
+                       cfg.compute_dtype),
+    )
+
+
+def mamba2_reference(params, x, cfg: ModelConfig):
+    """Naive per-step recurrence — the oracle for the chunked path."""
+    bsz, s, _ = x.shape
+    state = init_mamba_state(cfg, bsz)
+    ys = []
+    for t in range(s):
+        y, state = mamba2_decode(params, x[:, t:t + 1], cfg, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_fn, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        params = {
+            "w_gate": dense_init(ks[0], d, (d, f), dt),
+            "w_up": dense_init(ks[1], d, (d, f), dt),
+            "w_down": dense_init(ks[2], f, (f, d), dt),
+        }
+        axes = {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+                "w_down": ("tp", "fsdp")}
+    else:
+        params = {
+            "w_up": dense_init(ks[0], d, (d, f), dt),
+            "w_down": dense_init(ks[1], f, (f, d), dt),
+        }
+        axes = {"w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp")}
+    return params, axes
+
+
+def mlp_forward(params, x, cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        act = jax.nn.silu(x @ params["w_gate"])
+        return (act * (x @ params["w_up"])) @ params["w_down"]
+    if cfg.mlp_act == "geglu":
+        act = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (act * (x @ params["w_up"])) @ params["w_down"]
+    h = act_fn("gelu")(x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,507 @@
+"""Model assembly: embed -> scanned blocks -> head, for all six families.
+
+Public API (all functional):
+  init(key, cfg)                       -> (params, axes)
+  forward(params, batch, cfg)          -> logits            (training)
+  prefill(params, batch, cfg, max_seq) -> (logits, cache)
+  decode(params, tokens, cache, cfg)   -> (logits, cache)   (one step)
+  loss_fn(params, batch, cfg, ...)     -> (loss, metrics)
+
+Layer stacks run under ``lax.scan`` with stacked parameters (compile-time
+O(1) in depth) and configurable rematerialization.  Decode scans over
+(layer params, layer cache) pairs, emitting the updated cache as scan ys.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constraint
+from repro.models import attention as attn
+from repro.models import mamba2, mlp, moe, xlstm
+from repro.models.common import embed_init, rms_norm, split_keys, stack_params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_tblock(key, cfg: ModelConfig):
+    """One transformer block (dense or MoE)."""
+    k1, k2 = jax.random.split(key)
+    a_p, a_ax = attn.init_attention(k1, cfg)
+    if cfg.is_moe:
+        f_p, f_ax = moe.init_moe(k2, cfg)
+        fkey = "moe"
+    else:
+        f_p, f_ax = mlp.init_mlp(k2, cfg)
+        fkey = "mlp"
+    params = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32), "attn": a_p,
+              "ln2": jnp.zeros((cfg.d_model,), jnp.float32), fkey: f_p}
+    axes = {"ln1": (None,), "attn": a_ax, "ln2": (None,), fkey: f_ax}
+    return params, axes
+
+
+def _tblock_forward(p, x, positions, cfg: ModelConfig):
+    h = attn.attention_forward(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                               positions, cfg)
+    x = x + h
+    sp = "sp" if cfg.seq_shard else None
+    x = constraint(x, ("batch", sp, None))
+    if cfg.is_moe:
+        h, aux = moe.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    else:
+        h = mlp.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        aux = jnp.float32(0)
+    # sequence-parallel carry: the scan-saved residual is seq-sharded
+    return constraint(x + h, ("batch", sp, None)), aux
+
+
+def _tblock_decode(p, x, cache, cfg: ModelConfig):
+    h, new_cache = attn.attention_decode(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cache, cfg)
+    x = x + h
+    if cfg.is_moe:
+        h, _ = moe.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps),
+                               cfg, capacity=max(x.shape[0], 8))
+    else:
+        h = mlp.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x + h, new_cache
+
+
+def _tblock_prefill(p, x, positions, cfg: ModelConfig, max_seq: int):
+    h, cache = attn.prefill_cache(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), positions, cfg, max_seq)
+    x = x + h
+    if cfg.is_moe:
+        h, _ = moe.moe_forward(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    else:
+        h = mlp.mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def _init_embed(key, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.family == "audio":
+        p = {"tok": embed_init(key, (cfg.n_codebooks, cfg.vocab_size,
+                                     cfg.d_model), dt)}
+        ax = {"tok": (None, "tp", "fsdp")}
+        return p, ax
+    p = {"tok": embed_init(key, (cfg.vocab_size, cfg.d_model), dt)}
+    ax = {"tok": ("tp", "fsdp")}
+    return p, ax
+
+
+def _embed(p, tokens, cfg: ModelConfig):
+    if cfg.family == "audio":
+        # tokens: (B, S, CB); sum codebook embeddings (delay pattern stub)
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), cfg.compute_dtype)
+        for cb in range(cfg.n_codebooks):
+            x = x + jnp.take(p["tok"][cb], tokens[..., cb], axis=0)
+    else:
+        x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def _init_head(key, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.family == "audio":
+        p = {"w": embed_init(key, (cfg.n_codebooks, cfg.d_model,
+                                   cfg.vocab_size), dt)}
+        return p, {"w": (None, "fsdp", "tp")}
+    if cfg.tie_embeddings:
+        return {}, {}
+    p = {"w": embed_init(key, (cfg.d_model, cfg.vocab_size), dt)}
+    return p, {"w": ("fsdp", "tp")}
+
+
+def _head(p, embed_p, x, cfg: ModelConfig):
+    if cfg.family == "audio":
+        return jnp.einsum("bsd,cdv->bscv", x, p["w"])
+    if cfg.tie_embeddings:
+        return x @ embed_p["tok"].T
+    return x @ p["w"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    ks = split_keys(key, cfg.n_layers + 4)
+    emb_p, emb_ax = _init_embed(ks[0], cfg)
+    head_p, head_ax = _init_head(ks[1], cfg)
+    params: dict[str, Any] = {"embed": emb_p, "head": head_p,
+                              "ln_f": jnp.zeros((cfg.d_model,), jnp.float32)}
+    axes: dict[str, Any] = {"embed": emb_ax, "head": head_ax, "ln_f": (None,)}
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        if cfg.n_layers == 0:  # roofline L0 composition point
+            params["blocks"], axes["blocks"] = {}, {}
+        else:
+            layers = [_init_tblock(ks[2 + i], cfg) for i in range(cfg.n_layers)]
+            params["blocks"], axes["blocks"] = stack_params(
+                [p for p, _ in layers], layers[0][1])
+    elif cfg.family == "hybrid":
+        if cfg.n_layers == 0:
+            params["blocks"], axes["blocks"] = {}, {}
+        else:
+            layers = [mamba2.init_mamba2(ks[2 + i], cfg)
+                      for i in range(cfg.n_layers)]
+            params["blocks"], axes["blocks"] = stack_params(
+                [p for p, _ in layers], layers[0][1])
+            params["mamba_ln"] = jnp.zeros((cfg.n_layers, cfg.d_model),
+                                           jnp.float32)
+            axes["mamba_ln"] = (None, None)
+            # the Zamba *shared* attention block (one set, reused)
+            sp, sax = _init_tblock(ks[2 + cfg.n_layers], cfg)
+            params["shared_attn"], axes["shared_attn"] = sp, sax
+    elif cfg.family == "ssm":
+        blocks, baxes = [], []
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_layers:
+                p, ax = xlstm.init_slstm(ks[2 + i], cfg)
+            else:
+                p, ax = xlstm.init_mlstm(ks[2 + i], cfg)
+            ln = jnp.zeros((cfg.d_model,), jnp.float32)
+            blocks.append({"ln": ln, "mix": p})
+            baxes.append({"ln": (None,), "mix": ax})
+        params["blocks"] = blocks
+        axes["blocks"] = baxes
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = _embed(params["embed"], tokens, cfg)
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constraint(x, ("batch", "sp", None))
+    aux_total = jnp.float32(0)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, layer_p):
+            h, aux = carry
+            h2, a = _tblock_forward(layer_p, h, positions, cfg)
+            return (h2, aux + a), None
+
+        if cfg.n_layers > 0:
+            (x, aux_total), _ = jax.lax.scan(
+                _remat(body, cfg), (x, aux_total), params["blocks"])
+    elif cfg.family == "hybrid":
+        x, aux_total = _zamba_forward(params, x, positions, cfg)
+    elif cfg.family == "ssm":
+        for i, bp in enumerate(params["blocks"]):
+            def layer_fn(h, bp=bp, i=i):
+                hh = rms_norm(h, bp["ln"], cfg.norm_eps)
+                if i in cfg.slstm_layers:
+                    y, _ = xlstm.slstm_forward(bp["mix"], hh, cfg)
+                else:
+                    y, _ = xlstm.mlstm_forward(bp["mix"], hh, cfg)
+                return constraint(h + y, ("batch", "sp", None))
+
+            x = (jax.checkpoint(layer_fn)(x) if cfg.remat != "none"
+                 else layer_fn(x))
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params["head"], params["embed"], x, cfg)
+    if cfg.family == "vlm" and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]
+    return logits, aux_total
+
+
+def _zamba_groups(cfg: ModelConfig):
+    per = cfg.attn_every
+    n_full = cfg.n_layers // per
+    rem = cfg.n_layers - n_full * per
+    return n_full, per, rem
+
+
+def _zamba_forward(params, x, positions, cfg: ModelConfig):
+    n_full, per, rem = _zamba_groups(cfg)
+
+    def mamba_body(carry, xs):
+        h = carry
+        layer_p, ln = xs
+        y, _ = mamba2.mamba2_forward(layer_p, rms_norm(h, ln, cfg.norm_eps), cfg)
+        return constraint(h + y, ("batch", "sp", None)), None
+
+    body = _remat(mamba_body, cfg)
+    shared = _remat(
+        lambda h: _tblock_forward(params["shared_attn"], h, positions, cfg),
+        cfg)
+    aux = jnp.float32(0)
+    for g in range(n_full):
+        xs = (jax.tree.map(lambda a: a[g * per:(g + 1) * per], params["blocks"]),
+              params["mamba_ln"][g * per:(g + 1) * per])
+        x, _ = jax.lax.scan(body, x, xs)
+        x2, a = shared(x)
+        x, aux = x2, aux + a
+    if rem:
+        xs = (jax.tree.map(lambda a: a[-rem:], params["blocks"]),
+              params["mamba_ln"][-rem:])
+        x, _ = jax.lax.scan(body, x, xs)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig, z_loss: float = 1e-4,
+            aux_coef: Optional[float] = None):
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    # one-hot contraction instead of take_along_axis: a gather along the
+    # tp-sharded vocab dim would force XLA to replicate the logits
+    # (B x S x V fp32 per chip); the masked reduction stays sharded.
+    onehot = jax.nn.one_hot(labels.astype(jnp.int32), lg.shape[-1],
+                            dtype=lg.dtype)
+    ll = jnp.sum(lg * onehot, axis=-1)
+    nll = lse - ll
+    if "mask" in batch:
+        mask = batch["mask"].astype(jnp.float32)
+        if mask.ndim < nll.ndim:
+            mask = mask[..., None]
+        denom = jnp.maximum(mask.sum(), 1.0)
+        loss = (nll * mask).sum() / denom
+        zl = ((lse ** 2) * mask).sum() / denom
+    else:
+        loss = nll.mean()
+        zl = (lse ** 2).mean()
+    total = loss + z_loss * zl
+    coef = cfg.router_aux_coef if aux_coef is None else aux_coef
+    if cfg.is_moe:
+        total = total + coef * aux / cfg.n_layers
+    return total, {"nll": loss, "z_loss": zl, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+class ServeCache(NamedTuple):
+    layers: Any         # stacked per-layer cache pytree
+    extra: Any          # family-specific (shared attn cache, etc.)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int):
+    tokens = batch["tokens"]
+    x = _embed(params["embed"], tokens, cfg)
+    b, s = tokens.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(h, layer_p):
+            h2, cache = _tblock_prefill(layer_p, h, positions, cfg, max_seq)
+            return h2, cache
+
+        if cfg.n_layers > 0:
+            x, caches = jax.lax.scan(body, x, params["blocks"])
+        else:  # roofline L0 composition point
+            caches = None
+        sc = ServeCache(caches, None)
+    elif cfg.family == "hybrid":
+        x, sc = _zamba_prefill(params, x, positions, cfg, max_seq)
+    elif cfg.family == "ssm":
+        layer_states = []
+        for i, bp in enumerate(params["blocks"]):
+            h = rms_norm(x, bp["ln"], cfg.norm_eps)
+            if i in cfg.slstm_layers:
+                y, st = xlstm.slstm_forward(bp["mix"], h, cfg)
+            else:
+                y, st = xlstm.mlstm_forward(bp["mix"], h, cfg)
+            x = x + y
+            layer_states.append(st)
+        sc = ServeCache(layer_states, None)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params["head"], params["embed"], x[:, -1:], cfg)
+    return logits, sc
+
+
+def _zamba_prefill(params, x, positions, cfg, max_seq):
+    n_full, per, rem = _zamba_groups(cfg)
+    m_states = []
+    attn_caches = []
+
+    def mk_body(ln_all):
+        def body(carry, xs):
+            h = carry
+            layer_p, ln = xs
+            y, st = mamba2.mamba2_forward(
+                layer_p, rms_norm(h, ln, cfg.norm_eps), cfg)
+            return h + y, st
+        return body
+
+    body = mk_body(params["mamba_ln"])
+    for g in range(n_full):
+        xs = (jax.tree.map(lambda a: a[g * per:(g + 1) * per], params["blocks"]),
+              params["mamba_ln"][g * per:(g + 1) * per])
+        x, sts = jax.lax.scan(body, x, xs)
+        m_states.append(sts)
+        x, cache = _tblock_prefill(params["shared_attn"], x, positions, cfg,
+                                   max_seq)
+        attn_caches.append(cache)
+    if rem:
+        xs = (jax.tree.map(lambda a: a[-rem:], params["blocks"]),
+              params["mamba_ln"][-rem:])
+        x, sts = jax.lax.scan(body, x, xs)
+        m_states.append(sts)
+    return x, ServeCache(m_states, attn_caches)
+
+
+def decode(params, tokens, cache: ServeCache, cfg: ModelConfig):
+    """One decode step.  tokens: (B, 1) int32 (audio: (B, 1, CB))."""
+    x = _embed(params["embed"], tokens, cfg)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(h, xs):
+            layer_p, layer_cache = xs
+            h2, new_cache = _tblock_decode(layer_p, h, layer_cache, cfg)
+            return h2, new_cache
+
+        if cfg.n_layers > 0:
+            x, new_caches = jax.lax.scan(
+                body, x, (params["blocks"], cache.layers))
+        else:  # roofline L0 composition point
+            new_caches = cache.layers
+        new_sc = ServeCache(new_caches, None)
+    elif cfg.family == "hybrid":
+        x, new_sc = _zamba_decode(params, x, cache, cfg)
+    elif cfg.family == "ssm":
+        new_states = []
+        for i, bp in enumerate(params["blocks"]):
+            h = rms_norm(x, bp["ln"], cfg.norm_eps)
+            if i in cfg.slstm_layers:
+                y, st = xlstm.slstm_decode(bp["mix"], h, cfg, cache.layers[i])
+            else:
+                y, st = xlstm.mlstm_decode(bp["mix"], h, cfg, cache.layers[i])
+            x = x + y
+            new_states.append(st)
+        new_sc = ServeCache(new_states, None)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params["head"], params["embed"], x, cfg)
+    return logits, new_sc
+
+
+def _zamba_decode(params, x, cache: ServeCache, cfg):
+    n_full, per, rem = _zamba_groups(cfg)
+
+    def body(carry, xs):
+        h = carry
+        layer_p, ln, st = xs
+        y, st2 = mamba2.mamba2_decode(layer_p, rms_norm(h, ln, cfg.norm_eps),
+                                      cfg, st)
+        return h + y, st2
+
+    new_m, new_a = [], []
+    for g in range(n_full):
+        xs = (jax.tree.map(lambda a: a[g * per:(g + 1) * per], params["blocks"]),
+              params["mamba_ln"][g * per:(g + 1) * per], cache.layers[g])
+        x, sts = jax.lax.scan(body, x, xs)
+        new_m.append(sts)
+        x, ac = _tblock_decode(params["shared_attn"], x, cache.extra[g], cfg)
+        new_a.append(ac)
+    if rem:
+        xs = (jax.tree.map(lambda a: a[-rem:], params["blocks"]),
+              params["mamba_ln"][-rem:], cache.layers[-1])
+        x, sts = jax.lax.scan(body, x, xs)
+        new_m.append(sts)
+    return x, ServeCache(new_m, new_a)
+
+
+# ---------------------------------------------------------------------------
+# cache constructors (decode-from-scratch path used by the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def fresh_cache(cfg: ModelConfig, batch: int, max_seq: int) -> ServeCache:
+    """A cache as it would exist after prefilling ``max_seq`` tokens."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        one = attn.init_cache(cfg, batch, max_seq)
+        layers = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+            one)
+        layers = layers._replace(
+            pos=jnp.full((cfg.n_layers, batch), max_seq, jnp.int32))
+        return ServeCache(layers, None)
+    if cfg.family == "hybrid":
+        n_full, per, rem = _zamba_groups(cfg)
+        m_states, a_caches = [], []
+        for g in range(n_full):
+            st = mamba2.init_mamba_state(cfg, batch)
+            m_states.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (per,) + a.shape), st))
+            ac = attn.init_cache(cfg, batch, max_seq)
+            a_caches.append(ac._replace(
+                pos=jnp.full((batch,), max_seq, jnp.int32)))
+        if rem:
+            st = mamba2.init_mamba_state(cfg, batch)
+            m_states.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (rem,) + a.shape), st))
+        return ServeCache(m_states, a_caches)
+    if cfg.family == "ssm":
+        states = []
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_layers:
+                states.append(xlstm.init_slstm_state(cfg, batch))
+            else:
+                states.append(xlstm.init_mlstm_state(cfg, batch))
+        return ServeCache(states, None)
+    raise ValueError(cfg.family)
+
+
+def init_abstract(cfg: ModelConfig):
+    """(abstract params, axes) with no allocation (eval_shape + static
+    side-channel for the string-leaved axes tree)."""
+    holder = {}
+
+    def only_params(k):
+        p, ax = init(k, cfg)
+        holder["axes"] = ax
+        return p
+
+    params_abs = jax.eval_shape(only_params, jax.random.PRNGKey(0))
+    return params_abs, holder["axes"]

@@ -1,0 +1,289 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows arXiv:2405.04517 with stabilized exponential gating:
+  mLSTM:  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+          y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+  sLSTM:  scalar cell per unit with hidden-state recurrence feeding gates.
+
+Both use the log-space stabilizer m_t = max(log f_t + m_{t-1}, log i_t).
+mLSTM is parallelizable (we scan chunks); sLSTM is strictly sequential by
+construction (hidden recurrence) and scans per step — it is used sparsely
+(cfg.slstm_layers), as in the paper's LM configs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, P, P) matrix memory
+    n: jax.Array  # (B, H, P) normalizer
+    m: jax.Array  # (B, H) stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D) cell
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D) hidden (recurrent input)
+    m: jax.Array  # (B, D) stabilizer
+
+
+def _pdim(cfg: ModelConfig) -> int:
+    return (2 * cfg.d_model) // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 4)
+    params = {
+        "w_up": dense_init(ks[0], d, (d, 2 * di), dt),     # [x_in, z-gate]
+        "w_qkv": dense_init(ks[1], di, (di, 3 * di), dt),
+        "w_if": dense_init(ks[2], di, (di, 2 * nh), dt),   # exp gates/head
+        "w_down": dense_init(ks[3], di, (di, d), dt),
+    }
+    axes = {"w_up": ("fsdp", "tp"), "w_qkv": ("tp", None),
+            "w_if": ("tp", None), "w_down": ("tp", "fsdp")}
+    return params, axes
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    nh, p = cfg.n_heads, _pdim(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, nh, p, p), jnp.float32),
+        n=jnp.zeros((batch, nh, p), jnp.float32),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_step(state: MLSTMState, q, k, v, i_raw, f_raw):
+    """One time step; q/k/v: (B,H,P), gates: (B,H) raw logits."""
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state.m, logi)
+    f_ = jnp.exp(logf + state.m - m_new)
+    i_ = jnp.exp(logi - m_new)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    p = qf.shape[-1]
+    kf = kf / jnp.sqrt(jnp.float32(p))
+    c = f_[..., None, None] * state.c + i_[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])
+    n = f_[..., None] * state.n + i_[..., None] * kf
+    num = jnp.einsum("bhpq,bhq->bhp", c, qf)
+    # Stabilized normalizer: with n normalized by exp(m), the |n.q| >= 1
+    # floor of the raw recurrence becomes exp(-m) (official xLSTM form).
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf)),
+                      jnp.exp(-m_new))
+    y = num / den[..., None]
+    return MLSTMState(c=c, n=n, m=m_new), y
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    """Largest divisor of s that is <= want (chunked scans need s % c == 0)."""
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, state: MLSTMState | None = None,
+                  chunk: int = 128):
+    """x: (B,S,D) -> (y, final_state).
+
+    Chunked gated-linear-attention form of the mLSTM recurrence: within a
+    chunk the quadratic (t,s) form, across chunks the normalized-state
+    carry — algebraically identical to the per-step recurrence (including
+    the log-space stabilizer; see test_xlstm.py) but with O(S/c) scan
+    steps, so the backward pass saves O(S/c) carries instead of O(S)
+    (the 3.9 TB -> GBs fix for the 4k/32k training shapes).
+    """
+    b, s, d = x.shape
+    nh, p = cfg.n_heads, _pdim(cfg)
+    di = 2 * d
+    up = x @ params["w_up"]
+    xin, z = up[..., :di], up[..., di:]
+    qkv = xin @ params["w_qkv"]
+    q, k, v = jnp.split(qkv.reshape(b, s, 3, nh, p), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    gates = (xin @ params["w_if"]).reshape(b, s, 2, nh)
+    i_raw, f_raw = gates[:, :, 0], gates[:, :, 1]
+    st = state if state is not None else init_mlstm_state(cfg, b)
+
+    c = _pick_chunk(s, chunk)
+    nc = s // c
+    qf = q.astype(jnp.float32).reshape(b, nc, c, nh, p)
+    kf = (k.astype(jnp.float32) / jnp.sqrt(jnp.float32(p))
+          ).reshape(b, nc, c, nh, p)
+    vf = v.astype(jnp.float32).reshape(b, nc, c, nh, p)
+    logi = i_raw.astype(jnp.float32).reshape(b, nc, c, nh)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)).reshape(b, nc, c, nh)
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, inp):
+        c_n, n_n, m_in = carry                  # (b,h,p,p),(b,h,p),(b,h)
+        qc, kc, vc, lic, lfc = inp              # (b,c,h,p) / (b,c,h)
+        bcum = jnp.cumsum(lfc, axis=1)          # inclusive cumulative logf
+        # D[t,s] = b_t - b_s + logi_s for s <= t
+        D = bcum[:, :, None, :] - bcum[:, None, :, :] + lic[:, None, :, :]
+        D = jnp.where(tril[None, :, :, None], D, -jnp.inf)
+        m_intra = jnp.max(D, axis=2)            # (b,c,h)
+        m_tot = jnp.maximum(bcum + m_in[:, None, :], m_intra)
+        alpha = jnp.exp(bcum + m_in[:, None, :] - m_tot)
+        W = jnp.exp(D - m_tot[:, :, None, :])   # (b,t,s,h)
+        G = jnp.einsum("bthk,bshk->btsh", qc, kc)
+        y_inter = alpha[..., None] * jnp.einsum("bhvk,bthk->bthv", c_n, qc)
+        y_num = y_inter + jnp.einsum("btsh,bshv->bthv", W * G, vc)
+        n_t = (alpha[..., None] * n_n[:, None]
+               + jnp.einsum("btsh,bshk->bthk", W, kc))
+        dot = jnp.einsum("bthk,bthk->bth", n_t, qc)
+        denom = jnp.maximum(jnp.abs(dot), jnp.exp(-m_tot))
+        h_out = y_num / denom[..., None]        # (b,c,h,p)
+        # carry update
+        total = bcum[:, -1]                     # (b,h)
+        w_end = total[:, None, :] - bcum + lic  # (b,s,h)
+        m_out = jnp.maximum(total + m_in, jnp.max(w_end, axis=1))
+        decay = jnp.exp(total + m_in - m_out)
+        wexp = jnp.exp(w_end - m_out[:, None, :])
+        c_out = (decay[..., None, None] * c_n
+                 + jnp.einsum("bsh,bshv,bshk->bhvk", wexp, vc, kc))
+        n_out = decay[..., None] * n_n + jnp.einsum("bsh,bshk->bhk", wexp, kc)
+        return (c_out, n_out, m_out), h_out
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(
+        chunk_step, (st.c, st.n, st.m),
+        (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+         logi.swapaxes(0, 1), logf.swapaxes(0, 1)))
+    y = ys.transpose(1, 0, 2, 3, 4).astype(x.dtype).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"], MLSTMState(c=c_f, n=n_f, m=m_f)
+
+
+def mlstm_forward_reference(params, x, cfg: ModelConfig,
+                            state: MLSTMState | None = None):
+    """Per-step oracle for the chunked path (tests)."""
+    b, s, d = x.shape
+    nh, p = cfg.n_heads, _pdim(cfg)
+    di = 2 * d
+    up = x @ params["w_up"]
+    xin, z = up[..., :di], up[..., di:]
+    qkv = xin @ params["w_qkv"]
+    q, k, v = jnp.split(qkv.reshape(b, s, 3, nh, p), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    gates = (xin @ params["w_if"]).reshape(b, s, 2, nh)
+    i_raw, f_raw = gates[:, :, 0], gates[:, :, 1]
+    st = state if state is not None else init_mlstm_state(cfg, b)
+
+    def step(carry, t):
+        qt, kt, vt, it, ft = t
+        return _mlstm_step(carry, qt, kt, vt, it, ft)
+
+    st, ys = jax.lax.scan(
+        step, st,
+        (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         i_raw.swapaxes(0, 1), f_raw.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).astype(x.dtype).reshape(b, s, di)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"], st
+
+
+def mlstm_decode(params, x, cfg: ModelConfig, state: MLSTMState):
+    b = x.shape[0]
+    nh, p = cfg.n_heads, _pdim(cfg)
+    di = 2 * x.shape[-1]
+    up = x[:, 0] @ params["w_up"]
+    xin, z = up[..., :di], up[..., di:]
+    qkv = (xin @ params["w_qkv"]).reshape(b, 3, nh, p)
+    gates = (xin @ params["w_if"]).reshape(b, 2, nh)
+    st, y = _mlstm_step(state, qkv[:, 0], qkv[:, 1], qkv[:, 2],
+                        gates[:, 0], gates[:, 1])
+    y = y.astype(x.dtype).reshape(b, di) * jax.nn.silu(z)
+    return (y @ params["w_down"])[:, None], st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 3)
+    f = max(cfg.d_ff, (8 * d) // 3)
+    params = {
+        "w_x": dense_init(ks[0], d, (d, 4 * d), dt),   # i,f,z,o from input
+        "r_h": dense_init(ks[1], d, (d, 4 * d), dt),   # recurrent
+        "w_ff1": dense_init(ks[2], d, (d, f), dt),
+        "w_ff2": dense_init(jax.random.fold_in(ks[2], 1), f, (f, d), dt),
+    }
+    axes = {"w_x": ("fsdp", "tp"), "r_h": ("fsdp", "tp"),
+            "w_ff1": ("fsdp", "tp"), "w_ff2": ("tp", "fsdp")}
+    return params, axes
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_step(params, state: SLSTMState, xt):
+    """xt: (B, D)."""
+    d = xt.shape[-1]
+    pre = (xt @ params["w_x"]).astype(jnp.float32) \
+        + (state.h.astype(xt.dtype) @ params["r_h"]).astype(jnp.float32)
+    i_raw, f_raw, z_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state.m, i_raw)
+    i_ = jnp.exp(i_raw - m_new)
+    f_ = jnp.exp(logf + state.m - m_new)
+    c = f_ * state.c + i_ * jnp.tanh(z_raw)
+    n = f_ * state.n + i_
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_forward(params, x, cfg: ModelConfig, state: SLSTMState | None = None,
+                  chunk: int = 64):
+    """Strictly-sequential sLSTM; nested chunk scans bound backward memory
+    (outer scan saves one small carry per chunk, inner steps recompute
+    under jax.checkpoint)."""
+    b, s, d = x.shape
+    st = state if state is not None else init_slstm_state(cfg, b)
+    c = _pick_chunk(s, chunk)
+    nc = s // c
+    xc = x.reshape(b, nc, c, d).swapaxes(0, 1)  # (nc, b, c, d)
+
+    def chunk_fn(carry, xck):
+        def step(stt, xt):
+            new = _slstm_step(params, stt, xt)
+            return new, new.h
+
+        stt, hs = jax.lax.scan(step, carry, xck.swapaxes(0, 1))
+        return stt, hs  # hs: (c, b, d)
+
+    st, hs = jax.lax.scan(jax.checkpoint(chunk_fn), st, xc)
+    y = hs.transpose(2, 0, 1, 3).reshape(b, s, d).astype(x.dtype)
+    ff = jax.nn.gelu(y @ params["w_ff1"], approximate=True) @ params["w_ff2"]
+    return ff, st
+
+
+def slstm_decode(params, x, cfg: ModelConfig, state: SLSTMState):
+    st = _slstm_step(params, state, x[:, 0])
+    y = st.h.astype(x.dtype)[:, None]
+    ff = jax.nn.gelu(y @ params["w_ff1"], approximate=True) @ params["w_ff2"]
+    return ff, st

@@ -1,0 +1,89 @@
+"""AdamW with decoupled weight decay, grad clipping, ZeRO-friendly state.
+
+Optimizer state mirrors parameter sharding (m/v get the same logical axes
+as their parameter), which combined with the FSDP rules *is* the ZeRO
+partitioning — no separate machinery needed.  fp32 master weights are kept
+when params are low-precision.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 copies of low-precision params
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def state_axes(param_axes) -> AdamWState:
+    """Logical axes for the optimizer state (mirrors params)."""
+    return AdamWState(step=(), m=param_axes, v=param_axes, master=param_axes)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def lr_schedule(tc: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = tc.lr * (step + 1) / max(tc.warmup_steps, 1)
+        prog = jnp.clip((step - tc.warmup_steps)
+                        / max(tc.total_steps - tc.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * tc.lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < tc.warmup_steps, warm, jnp.maximum(cos, 0.1 * tc.lr))
+    return lr
+
+
+def apply_updates(params, state: AdamWState, grads, tc: TrainConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(tc)(step)
+    b1, b2, eps = tc.b1, tc.b2, tc.eps
+
+    def upd(m, v, g, master):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / (1 - b1 ** step.astype(jnp.float32))
+        vh = v2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + eps) + tc.weight_decay * master
+        master2 = master - lr * delta
+        return m2, v2, master2
+
+    flat_m, tdef = jax.tree.flatten(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_g = jax.tree.leaves(grads)
+    flat_w = jax.tree.leaves(state.master)
+    outs = [upd(m, v, g, w) for m, v, g, w in
+            zip(flat_m, flat_v, flat_g, flat_w)]
+    new_m = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_master = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_master, params)
+    return new_params, AdamWState(step, new_m, new_v, new_master), {
+        "grad_norm": gnorm, "lr": lr}

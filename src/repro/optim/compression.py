@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two codecs, both with residual error feedback so compression error does not
+accumulate (Karimireddy et al., 2019):
+
+* **int8**: per-tensor symmetric quantization of the gradient before the
+  (conceptual) all-reduce — 4x wire traffic reduction at bf16 training.
+* **top-k**: magnitude sparsification keeping ``frac`` of entries.
+
+In single-program XLA the all-reduce is implicit in sharding propagation;
+the codec is applied around the gradient computation and its *wire-format
+byte count* is reported so EXPERIMENTS.md can quote the collective-bytes
+delta (the dry-run's collective term scales with it for DP-bound configs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any
+
+
+def init_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quant_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(int(flat.size * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress(grads, fb: ErrorFeedback, method: str, topk_frac: float = 0.01):
+    """Returns (decoded grads as seen post-allreduce, new feedback, stats)."""
+    if method == "none":
+        return grads, fb, {"wire_bytes_frac": 1.0}
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        if method == "int8":
+            dec = _quant_int8(gf)
+        elif method == "topk":
+            dec = _topk(gf, topk_frac)
+        else:
+            raise ValueError(method)
+        return dec, gf - dec
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(fb.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    dec = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    res = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    frac = {"int8": 0.25, "topk": topk_frac * 2.5}[method]  # idx overhead
+    return dec, ErrorFeedback(res), {"wire_bytes_frac": frac}

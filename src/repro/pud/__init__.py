@@ -1,0 +1,6 @@
+"""PUD runtime: device model, ISA, bit-serial compiler, TMR, erase, offload."""
+
+from repro.pud.arith import BitSerial, run_elementwise  # noqa: F401
+from repro.pud.device import DeviceConfig, PUDDevice  # noqa: F401
+from repro.pud.isa import Program, PUDOp  # noqa: F401
+from repro.pud.tmr import vote_array, vote_pytree, vote_words  # noqa: F401

@@ -1,0 +1,108 @@
+"""PUD instruction stream: the compilation target of the bit-serial compiler.
+
+Every §8.1 microbenchmark lowers to a stream of :class:`PUDOp` (MAJX issues,
+row copies, Frac inits, NOTs-via-complement-copy).  The stream is both
+executable (logical backend in :mod:`repro.pud.arith`, device backend in
+:mod:`repro.pud.device`) and costable (:mod:`repro.pud.latency`), which is
+how the Fig. 16 / Fig. 17 benchmarks derive execution time from the same
+program the correctness tests run.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable
+
+from repro.core.errormodel import ErrorModel, expected_retries
+from repro.pud import latency as lat
+
+
+@dataclasses.dataclass(frozen=True)
+class PUDOp:
+    kind: str          # MAJ | NOT | COPY | MRC | FRAC | WR | RD
+    x: int = 0         # majority arity (MAJ only)
+    n_act: int = 0     # simultaneous activation count (MAJ/MRC)
+    tag: str = ""      # provenance (e.g. "add/carry[7]")
+
+
+@dataclasses.dataclass
+class Program:
+    ops: list[PUDOp] = dataclasses.field(default_factory=list)
+
+    def emit(self, kind: str, x: int = 0, n_act: int = 0, tag: str = "") -> None:
+        self.ops.append(PUDOp(kind, x, n_act, tag))
+
+    def extend(self, other: "Program") -> None:
+        self.ops.extend(other.ops)
+
+    def histogram(self) -> dict[tuple, int]:
+        h: dict[tuple, int] = collections.Counter()
+        for op in self.ops:
+            h[(op.kind, op.x, op.n_act)] += 1
+        return dict(h)
+
+    # ------------------------------------------------------------- costing
+    def latency_ns(
+        self, errors: ErrorModel, *, pipelined: bool = False,
+        best_group: bool = False, **env,
+    ) -> float:
+        """Expected execution time with retry-until-success semantics.
+
+        ``pipelined=True`` drops operand staging (RowClone/Frac setup) from
+        MAJ issues — the steady-state cost when operands already live in the
+        subarray, as in the paper's tightly-scheduled §8.1 programs.
+        ``best_group=True`` uses the best-row-group success rates the case
+        studies select (calibration.MAJX_BEST_GROUP_SUCCESS).
+        """
+        from repro.core import calibration as cal
+
+        total = 0.0
+        for op in self.ops:
+            if op.kind == "MAJ":
+                if best_group:
+                    s = cal.MAJX_BEST_GROUP_SUCCESS[errors.mfr].get(op.x, 0.005)
+                else:
+                    s = errors.majx_success(op.x, op.n_act, **env)
+                issue = (lat.LAT.majx_apa if pipelined
+                         else lat.majx_issue_ns(op.x, op.n_act))
+                total += issue * expected_retries(s)
+            elif op.kind == "MRC":
+                s = errors.mrc_success(op.n_act - 1, **env)
+                total += lat.LAT.mrc * expected_retries(s)
+            elif op.kind in ("NOT", "COPY"):
+                s = errors.mrc_success(1, t1=36.0, t2=6.0, **env)
+                total += lat.LAT.rowclone * expected_retries(s)
+            elif op.kind == "FRAC":
+                total += lat.LAT.frac
+            elif op.kind == "WR":
+                total += lat.LAT.wr_row
+            elif op.kind == "RD":
+                total += lat.LAT.rd_row
+            else:
+                raise ValueError(f"unknown op kind {op.kind}")
+        return total
+
+    def energy_nj(self, errors: ErrorModel, **env) -> float:
+        """Energy from the Fig.-5 power model over the schedule."""
+        from repro.core import power as pw
+
+        total = 0.0
+        for op in self.ops:
+            if op.kind == "MAJ":
+                s = errors.majx_success(op.x, op.n_act, **env)
+                t = lat.majx_issue_ns(op.x, op.n_act) * expected_retries(s)
+                total += pw.simra_power_w(op.n_act) * t
+            elif op.kind == "MRC":
+                s = errors.mrc_success(op.n_act - 1, **env)
+                t = lat.LAT.mrc * expected_retries(s)
+                total += pw.simra_power_w(op.n_act) * t
+            elif op.kind in ("NOT", "COPY"):
+                total += pw.STANDARD_POWER_W["ACT_PRE"] * lat.LAT.rowclone
+            elif op.kind == "FRAC":
+                total += pw.STANDARD_POWER_W["ACT_PRE"] * lat.LAT.frac
+            elif op.kind == "WR":
+                total += pw.STANDARD_POWER_W["WR"] * lat.LAT.wr_row
+            elif op.kind == "RD":
+                total += pw.STANDARD_POWER_W["RD"] * lat.LAT.rd_row
+        return total

@@ -1,0 +1,96 @@
+"""PUD-vs-TPU offload planner.
+
+The paper demonstrates that COTS DRAM computes bulk bitwise ops in-place.
+Whether offloading such an op from the TPU to a PUD-capable memory pays off
+depends on (a) the TPU roofline cost of the op (pure bandwidth for bitwise
+work) vs (b) the PUD command-schedule latency including success-rate-driven
+retries, and (c) the saved HBM traffic.  This planner prices both sides and
+is used by the serving engine to decide where integrity votes and bulk
+bitmap ops run.  On TPU-only deployments it degrades to always-TPU (and the
+framework's Pallas `vote` kernel runs the op), so the decision is advisory.
+
+TPU-side constants match the roofline setup in launch/roofline.py
+(TPU v5e-like: 197 TFLOP/s bf16, 819 GB/s HBM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import calibration as cal
+from repro.core.errormodel import ErrorModel, expected_retries
+from repro.pud import latency as lat
+
+HBM_BYTES_PER_S = 819e9
+PEAK_FLOPS = 197e12
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadDecision:
+    op: str
+    n_bytes: int
+    tpu_ns: float
+    pud_ns: float
+    winner: str
+    detail: str
+
+    @property
+    def speedup(self) -> float:
+        return self.tpu_ns / self.pud_ns
+
+
+def tpu_bitwise_ns(n_bytes: int, n_operands: int = 2) -> float:
+    """Bandwidth-bound cost of a bulk bitwise op on the TPU (read all
+    operands + write result; bitwise VPU throughput never binds)."""
+    traffic = n_bytes * (n_operands + 1)
+    return traffic / HBM_BYTES_PER_S * 1e9
+
+
+def pud_majx_ns(n_bytes: int, x: int, n_act: int, errors: ErrorModel,
+                subarrays: int = 48, best_group: bool = True) -> float:
+    """PUD cost: ceil(bits/row_bits) MAJX issues spread over subarrays."""
+    if best_group:
+        s = cal.MAJX_BEST_GROUP_SUCCESS[errors.mfr].get(x, 0.005)
+    else:
+        s = errors.majx_success(x, n_act)
+    issues = -(-(n_bytes * 8) // lat.ROW_BITS)
+    per = lat.LAT.majx_apa * expected_retries(s)
+    waves = -(-issues // subarrays)
+    return waves * per
+
+
+def pud_mrc_ns(n_bytes: int, fanout: int, errors: ErrorModel,
+               subarrays: int = 48) -> float:
+    s = errors.mrc_success(fanout)
+    rows = -(-(n_bytes * 8) // lat.ROW_BITS)
+    waves = -(-rows // subarrays)
+    return waves * lat.LAT.mrc * expected_retries(s)
+
+
+def plan_vote(n_bytes: int, x: int = 3, errors: ErrorModel | None = None,
+              subarrays: int = 48) -> OffloadDecision:
+    """Where should an X-replica majority vote over ``n_bytes`` run?"""
+    errors = errors or ErrorModel("H")
+    tpu = tpu_bitwise_ns(n_bytes, n_operands=x)
+    pud = pud_majx_ns(n_bytes, x, 32, errors, subarrays)
+    winner = "pud" if pud < tpu else "tpu"
+    return OffloadDecision(
+        op=f"maj{x}_vote", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,
+        winner=winner,
+        detail=(f"tpu reads {x}x+writes 1x @819GB/s; pud issues "
+                f"{-(-(n_bytes*8)//lat.ROW_BITS)} MAJ{x} over {subarrays} subarrays"),
+    )
+
+
+def plan_broadcast(n_bytes: int, fanout: int,
+                   errors: ErrorModel | None = None,
+                   subarrays: int = 48) -> OffloadDecision:
+    """One-to-``fanout`` replication: HBM copies vs Multi-RowCopy."""
+    errors = errors or ErrorModel("H")
+    tpu = n_bytes * (1 + fanout) / HBM_BYTES_PER_S * 1e9
+    pud = pud_mrc_ns(n_bytes * fanout, min(fanout, 31), errors, subarrays)
+    winner = "pud" if pud < tpu else "tpu"
+    return OffloadDecision(
+        op=f"broadcast_x{fanout}", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,
+        winner=winner, detail="MRC wipes/copies n_act-1 rows per 90ns issue",
+    )

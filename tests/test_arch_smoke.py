@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train.step import init_train_state, make_train_step
+
+
+def _loader(cfg, batch=2, seq=32):
+    return SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+        n_codebooks=cfg.n_codebooks,
+        n_patches=cfg.n_patches if cfg.family == "vlm" else 0,
+        d_model=cfg.d_model))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(lr=1e-3, total_steps=10, warmup_steps=2)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, tc))
+    batch = _loader(cfg).batch(0)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), arch
+    # parameters actually moved
+    p0, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(p0.params)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_shapes(arch):
+    from repro.models import model as M
+
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init(jax.random.PRNGKey(1), cfg)
+    batch = _loader(cfg).batch(0)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    logits, aux = M.forward(params, batch, cfg)
+    b, s = batch["tokens"].shape[:2]
+    if cfg.family == "audio":
+        assert logits.shape == (b, s, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, s, cfg.vocab_size)
+    assert not jnp.isnan(logits.astype(jnp.float32)).any(), arch
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "zamba2-1.2b", "xlstm-125m",
+                                  "musicgen-medium", "qwen3-moe-235b-a22b"])
+def test_arch_smoke_prefill_decode(arch):
+    from repro.models import model as M
+
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init(jax.random.PRNGKey(2), cfg)
+    batch = _loader(cfg, batch=2, seq=16).batch(0)
+    toks = jnp.asarray(batch["tokens"])
+    logits, cache = M.prefill(params, {"tokens": toks}, cfg, max_seq=32)
+    nxt = toks[:, -1:]
+    lg, cache = M.decode(params, nxt, cache, cfg)
+    if cfg.family == "audio":
+        assert lg.shape == (2, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert lg.shape == (2, 1, cfg.vocab_size)
+    assert not jnp.isnan(lg.astype(jnp.float32)).any()
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    c = get_config("mixtral-8x22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == \
+        (56, 6144, 48, 8, 16384, 32768, 8, 2)
+    assert c.sliding_window == 4096
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.n_experts, c.top_k) == \
+        (94, 4096, 64, 4, 1536, 151936, 128, 8)
+    c = get_config("chatglm3-6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 4096, 32, 2, 13696, 65024)
+    c = get_config("gemma-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.head_dim, c.d_ff,
+            c.vocab_size) == (28, 3072, 16, 256, 24576, 256000)
+    c = get_config("deepseek-coder-33b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (62, 7168, 56, 8, 19200, 32256)
+    c = get_config("glm4-9b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (40, 4096, 151552)
+    c = get_config("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab_size) == \
+        (38, 2048, 64, 32000)
+    c = get_config("musicgen-medium")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size,
+            c.n_codebooks) == (48, 1536, 24, 6144, 2048, 4)
+    c = get_config("xlstm-125m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == \
+        (12, 768, 4, 50304)
+    c = get_config("phi-3-vision-4.2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (32, 3072, 32, 8192, 32064)

@@ -1,0 +1,106 @@
+"""Majority-based bit-serial arithmetic (§8.1): exactness + op structure."""
+
+import numpy as np
+import pytest
+
+from proptest import rand_u32, sweep
+from repro.core.errormodel import ErrorModel
+from repro.pud.arith import BitSerial, run_elementwise
+from repro.core import bitplanes as bp
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("tier", [3, 5, 7, 9])
+@pytest.mark.parametrize("op", ["and", "or", "xor", "add", "sub"])
+def test_logic_and_addsub_exact(tier, op):
+    rng = np.random.default_rng((tier, hash(op) & 0xFF))
+    a, b = rand_u32(rng, 48), rand_u32(rng, 48)
+    ref = {"and": a & b, "or": a | b, "xor": a ^ b,
+           "add": (a + b).astype(np.uint32),
+           "sub": (a - b).astype(np.uint32)}[op]
+    out, prog = run_elementwise(op, a, b, tier=tier,
+                                n_act=32 if tier > 3 else 4)
+    assert (np.asarray(out) == ref).all()
+    assert len(prog.ops) > 0
+
+
+@pytest.mark.parametrize("tier", [3, 5])
+def test_mul_exact(tier):
+    rng = np.random.default_rng(tier)
+    a, b = rand_u32(rng, 24), rand_u32(rng, 24)
+    out, _ = run_elementwise("mul", a, b, tier=tier)
+    assert (np.asarray(out) == (a * b).astype(np.uint32)).all()
+
+
+@pytest.mark.parametrize("tier", [3, 7])
+def test_div_exact(tier):
+    rng = np.random.default_rng(tier + 10)
+    a = rand_u32(rng, 16)
+    b = np.maximum(rand_u32(rng, 16) >> 20, 1).astype(np.uint32)
+    out, _ = run_elementwise("div", a, b, tier=tier)
+    assert (np.asarray(out) == (a // b)).all()
+
+
+def test_tier5_shrinks_adder():
+    rng = np.random.default_rng(0)
+    a, b = rand_u32(rng, 8), rand_u32(rng, 8)
+    _, p3 = run_elementwise("add", a, b, tier=3)
+    _, p5 = run_elementwise("add", a, b, tier=5)
+    # 7 MAJ + 2 NOT vs 2 MAJ + 1 NOT per bit
+    assert len(p5.ops) < len(p3.ops) / 2.5
+
+
+def test_tier7_uses_maj7_carry_skip():
+    rng = np.random.default_rng(1)
+    a, b = rand_u32(rng, 8), rand_u32(rng, 8)
+    _, p7 = run_elementwise("add", a, b, tier=7)
+    kinds = {(op.kind, op.x) for op in p7.ops}
+    assert ("MAJ", 7) in kinds
+
+
+def test_latency_model_orders_tiers():
+    """MAJ5 construction beats MAJ3 baseline; MAJ9@H pays retry cost."""
+    rng = np.random.default_rng(2)
+    a, b = rand_u32(rng, 8), rand_u32(rng, 8)
+    em = ErrorModel("H")
+    t = {}
+    for tier in (3, 5):
+        _, prog = run_elementwise("add", a, b, tier=tier,
+                                  n_act=32 if tier > 3 else 4)
+        t[tier] = prog.latency_ns(em, pipelined=True, best_group=True)
+    assert t[5] < t[3]
+
+
+def test_carry_skip_identity():
+    """c2 == MAJ7(a1,a1,b1,b1,a0,b0,c0) for every input combo."""
+    ctx = BitSerial(tier=7, n_act=32)
+    for bits in range(32):
+        a1, b1, a0, b0, c0 = [(bits >> i) & 1 for i in range(5)]
+        planes = [jnp.asarray([0xFFFFFFFF if v else 0], jnp.uint32)
+                  for v in (a1, a1, b1, b1, a0, b0, c0)]
+        got = int(np.asarray(ctx.maj(*planes))[0]) & 1
+        c1 = (a0 + b0 + c0) >= 2
+        c2 = (a1 + b1 + c1) >= 2
+        assert got == int(c2), bits
+
+
+def test_sum_via_maj5_identity():
+    """s == MAJ5(a,b,c,~cout,~cout) for all 8 combos."""
+    ctx = BitSerial(tier=5, n_act=32)
+    for bits in range(8):
+        a, b, c = [(bits >> i) & 1 for i in range(3)]
+        cout = (a + b + c) >= 2
+        planes = [jnp.asarray([0xFFFFFFFF if v else 0], jnp.uint32)
+                  for v in (a, b, c, not cout, not cout)]
+        got = int(np.asarray(ctx.maj(*planes))[0]) & 1
+        assert got == ((a + b + c) & 1), bits
+
+
+@sweep(5)
+def test_program_costing_positive(rng):
+    a, b = rand_u32(rng, 8), rand_u32(rng, 8)
+    _, prog = run_elementwise("xor", a, b, tier=5, n_act=32)
+    em = ErrorModel("H")
+    assert prog.latency_ns(em) > 0
+    assert prog.energy_nj(em) > 0
+    assert prog.latency_ns(em, pipelined=True) < prog.latency_ns(em)

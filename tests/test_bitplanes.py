@@ -1,0 +1,84 @@
+"""Property tests for the packed bit-plane substrate."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from proptest import rand_bits, rand_u32, sweep
+from repro.core import bitplanes as bp
+
+
+@sweep(10)
+def test_pack_unpack_roundtrip(rng):
+    n_bits = int(rng.integers(1, 200))
+    bits = rand_bits(rng, 3, n_bits)
+    assert (np.asarray(bp.unpack(bp.pack(bits), n_bits)) == bits).all()
+
+
+@sweep(10)
+def test_popcount_matches_numpy(rng):
+    w = rand_u32(rng, 64)
+    got = np.asarray(bp.popcount(jnp.asarray(w)))
+    want = np.array([bin(x).count("1") for x in w])
+    assert (got == want).all()
+
+
+@sweep(10)
+def test_majority_matches_bit_counting(rng):
+    n = int(rng.choice([3, 5, 7, 9]))
+    planes = rand_u32(rng, n, 16)
+    got = np.asarray(bp.majority(jnp.asarray(planes)))
+    bits = np.stack([[(planes[i, j] >> k) & 1 for k in range(32)]
+                     for i in range(n) for j in range(16)])
+    bits = bits.reshape(n, 16, 32)
+    want_bits = (bits.sum(0) * 2 > n).astype(np.uint32)
+    want = (want_bits << np.arange(32, dtype=np.uint64)).sum(-1).astype(np.uint32)
+    assert (got == want).all()
+
+
+@sweep(6)
+def test_maj3_closed_form(rng):
+    a, b, c = rand_u32(rng, 3, 32)
+    got = bp.maj3_words(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    want = bp.majority(jnp.stack([jnp.asarray(a), jnp.asarray(b),
+                                  jnp.asarray(c)]))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_majority_replication_invariance():
+    """MAJ6(A,B,C,A,B,C) == MAJ3(A,B,C) — the paper's fn 3 identity."""
+    rng = np.random.default_rng(0)
+    a, b, c = (jnp.asarray(rand_u32(rng, 8)) for _ in range(3))
+    maj3 = bp.majority(jnp.stack([a, b, c]))
+    maj6 = bp.majority_with_ties(jnp.stack([a, b, c, a, b, c]), tie_value=0)
+    maj9 = bp.majority(jnp.stack([a, b, c] * 3))
+    assert (np.asarray(maj3) == np.asarray(maj6)).all()
+    assert (np.asarray(maj3) == np.asarray(maj9)).all()
+
+
+@sweep(6)
+def test_weighted_majority_identity(rng):
+    """MAJ3(x,y,z) == weighted majority (2,2,1) over (x,x,y,y,z)."""
+    x, y, z = (jnp.asarray(rand_u32(rng, 16)) for _ in range(3))
+    m3 = bp.maj3_words(x, y, z)
+    wm = bp.weighted_majority(jnp.stack([x, y, z]), jnp.asarray([2, 2, 1]))
+    assert (np.asarray(m3) == np.asarray(wm)).all()
+
+
+@sweep(8)
+def test_uint_element_transpose_roundtrip(rng):
+    k = int(rng.integers(1, 100))
+    x = rand_u32(rng, k)
+    planes = bp.pack_uint_elements(jnp.asarray(x))
+    back = bp.unpack_uint_elements(planes, k)
+    assert (np.asarray(back) == x).all()
+
+
+def test_bitcast_roundtrip_dtypes():
+    rng = np.random.default_rng(1)
+    for dtype in (jnp.float32, jnp.bfloat16, jnp.float16, jnp.int8,
+                  jnp.uint8, jnp.int32):
+        x = jnp.asarray(rng.standard_normal(37), jnp.float32).astype(dtype)
+        w, sh, dt = bp.bitcast_to_planes(x)
+        back = bp.bitcast_from_planes(w, sh, dt)
+        assert back.dtype == x.dtype and back.shape == x.shape
+        assert (np.asarray(back) == np.asarray(x)).all(), dtype

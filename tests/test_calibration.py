@@ -1,0 +1,65 @@
+"""Pin every paper anchor the rest of the system calibrates against."""
+
+import math
+
+from repro.core import calibration as cal
+
+
+def test_obs1_simra_success_levels():
+    assert cal.SIMRA_SUCCESS_BEST[32] == 0.9985
+    for n in (2, 4, 8, 16):
+        assert cal.SIMRA_SUCCESS_BEST[n] == 0.9999
+
+
+def test_obs8_majx_success_32row():
+    assert cal.MAJX_SUCCESS_32ROW == {3: 0.9900, 5: 0.7964, 7: 0.3387,
+                                      9: 0.0591}
+
+
+def test_obs6_derived_maj3_4row():
+    # 99.00 / 1.3081 = 75.68…%
+    assert abs(cal.maj3_success_4row() - 0.7568) < 1e-3
+
+
+def test_obs10_derived_unreplicated_bases():
+    assert abs(cal.majx_success_min_activation(5) - 0.7964 / 1.5627) < 1e-4
+    assert abs(cal.majx_success_min_activation(7) - 0.3387 / 1.3515) < 1e-4
+    assert abs(cal.majx_success_min_activation(9) - 0.0591 / 1.1311) < 1e-4
+
+
+def test_obs9_fixed_pattern_stays_below_one():
+    for x in (3, 5, 7, 9):
+        assert cal.majx_success_fixed_pattern(x) <= 1.0
+
+
+def test_obs14_mrc_levels():
+    assert cal.MRC_SUCCESS_BEST == {1: 0.99996, 3: 0.99989, 7: 0.99998,
+                                    15: 0.99999, 31: 0.99982}
+
+
+def test_replication_plan_matches_paper_examples():
+    # §3.3: MAJ3@32 -> 10 copies, 2 neutral.
+    assert cal.replication_plan(3, 32) == (10, 2)
+    assert cal.replication_plan(5, 32) == (6, 2)
+    assert cal.replication_plan(7, 32) == (4, 4)
+    assert cal.replication_plan(9, 32) == (3, 5)
+    assert cal.replication_plan(3, 4) == (1, 1)
+
+
+def test_min_activation_levels():
+    assert cal.min_activation_for(3) == 4
+    assert cal.min_activation_for(5) == 8
+    assert cal.min_activation_for(7) == 8
+    assert cal.min_activation_for(9) == 16
+
+
+def test_device_anchors():
+    assert cal.DEVICE_ANCHORS["H"].max_majx == 9
+    assert cal.DEVICE_ANCHORS["M"].max_majx == 7
+    assert not cal.DEVICE_ANCHORS["S"].supports_simra
+    assert cal.DEVICE_ANCHORS["M"].frac_via_bias
+
+
+def test_decoder_constants():
+    assert cal.DECODER_NUM_PREDECODERS == 5
+    assert 2 ** cal.DECODER_ROW_BITS == 512

@@ -1,0 +1,71 @@
+"""Monte-Carlo charge-sharing model reproduces the §7.2 SPICE study."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import calibration as cal
+from repro.core import chargeshare as cs
+
+
+def test_deviation_gain_anchor():
+    """MAJ3@32-row has exactly +159.05 % bitline deviation vs @4-row."""
+    gain = cs.deviation_mean(32) / cs.deviation_mean(4) - 1
+    assert gain == pytest.approx(cal.SPICE_DEVIATION_GAIN_32_OVER_4_REL,
+                                 rel=1e-6)
+
+
+def test_deviation_monotone_in_replication():
+    devs = [cs.deviation_mean(n) for n in (4, 8, 16, 32)]
+    assert devs == sorted(devs)
+
+
+def test_pv_sensitivity_4row_vs_32row():
+    """At 40 % process variation: 4-row drops ~46.58 %, 32-row ~0.01 %."""
+    key = jax.random.PRNGKey(0)
+    r4_0 = cs.monte_carlo_maj3(key, 4, 0.0)
+    r4_40 = cs.monte_carlo_maj3(key, 4, 0.40)
+    r32_40 = cs.monte_carlo_maj3(key, 32, 0.40)
+    s4_0 = float(jnp.mean(r4_0["success"]))
+    s4_40 = float(jnp.mean(r4_40["success"]))
+    s32_40 = float(jnp.mean(r32_40["success"]))
+    assert s4_0 == pytest.approx(1.0, abs=1e-3)
+    assert 1 - s4_40 / s4_0 == pytest.approx(cal.SPICE_MAJ3_4ROW_PV_DROP_REL,
+                                             abs=0.05)
+    assert 1 - s32_40 == pytest.approx(cal.SPICE_MAJ3_32ROW_PV_DROP_REL,
+                                       abs=0.005)
+
+
+def test_success_monotone_in_n_act_under_pv():
+    key = jax.random.PRNGKey(1)
+    succ = [float(jnp.mean(cs.monte_carlo_maj3(key, n, 0.30)["success"]))
+            for n in (4, 8, 16, 32)]
+    assert all(b >= a - 0.02 for a, b in zip(succ, succ[1:]))
+
+
+def test_neutral_rows_contribute_no_charge():
+    model = cs.BitlineModel()
+    charges = jnp.asarray([1.0, 1.0, 0.0, 0.5])  # MAJ3 + one Frac row
+    caps = jnp.ones((4,))
+    dev_with = model.deviation(charges, caps)
+    dev_without = model.deviation(charges[:3], caps[:3])
+    # neutral row adds capacitance (denominator) but no differential charge
+    assert float(dev_with) < float(dev_without)
+    assert float(dev_with) > 0
+
+
+def test_sense_amp_margin():
+    model = cs.BitlineModel()
+    assert float(model.sense(jnp.asarray(model.sense_margin * 2))) == 1.0
+    assert float(model.sense(jnp.asarray(-model.sense_margin * 2))) == -1.0
+    assert float(model.sense(jnp.asarray(model.sense_margin / 2))) == 0.0
+
+
+def test_spice_study_shapes():
+    out = cs.spice_study(jax.random.PRNGKey(2), iters=500)
+    assert (1, 0.0) in out and (32, 0.40) in out
+    # Fig 15a: activating *more than eight* rows always beats the
+    # single-row-activation deviation (paper §7.2, observation 2).
+    for pv in cal.SPICE_PV_LEVELS:
+        for n in (16, 32):
+            assert out[(n, pv)]["dev_mean"] > out[(1, pv)]["dev_mean"]

@@ -1,0 +1,68 @@
+"""Row-decoder hypothesis tests (paper §7.1)."""
+
+import pytest
+
+from proptest import sweep
+from repro.core.decoder import RowDecoder, fig13_32row_example, fig14_example
+
+
+def test_fig14_walkthrough():
+    """APA(0, 7) activates exactly rows {0, 1, 6, 7}."""
+    assert fig14_example() == (0, 1, 6, 7)
+
+
+def test_fig13_127_128_gives_32_rows():
+    """ACT 127 -> PRE -> ACT 128 splits all 5 predecoders -> 32 rows."""
+    rows = fig13_32row_example()
+    assert len(rows) == 32
+    assert 127 in rows and 128 in rows
+
+
+def test_reachable_counts_are_powers_of_two():
+    """Limitation 2: only 2/4/8/16/32 simultaneous rows are reachable."""
+    d = RowDecoder.for_subarray(512)
+    seen = set()
+    for rf in range(0, 512, 37):
+        for rs in range(0, 512, 41):
+            if rf != rs:
+                seen.add(d.n_activated(rf, rs))
+    assert seen <= {2, 4, 8, 16, 32}
+    assert 2 in seen and 4 in seen
+
+
+def test_count_is_two_to_split_predecoders():
+    d = RowDecoder.for_subarray(512)
+    for rf, rs in [(0, 1), (0, 7), (127, 128), (5, 250), (100, 413)]:
+        k = d.split_predecoders(rf, rs)
+        assert d.n_activated(rf, rs) == 2 ** k
+
+
+@sweep(10)
+def test_pair_for_n_rows_inverse(rng):
+    d = RowDecoder.for_subarray(512)
+    n = int(rng.choice([2, 4, 8, 16, 32]))
+    base = int(rng.integers(0, 256))
+    rf, rs = d.pair_for_n_rows(n, base)
+    group = d.apa_activated_rows(rf, rs)
+    assert len(group) == n
+    assert base in group
+
+
+def test_micron_1024_row_subarray_reaches_32():
+    d = RowDecoder.for_subarray(1024)
+    assert len(d.row_group(32, 0)) == 32
+    assert len(d.predecoders) == 5
+
+
+def test_group_contains_both_endpoints():
+    d = RowDecoder.for_subarray(512)
+    rows = d.apa_activated_rows(3, 300)
+    assert 3 in rows and 300 in rows
+
+
+def test_non_power_of_two_rejected():
+    d = RowDecoder.for_subarray(512)
+    with pytest.raises(ValueError):
+        d.pair_for_n_rows(6)
+    with pytest.raises(ValueError):
+        d.pair_for_n_rows(64)

@@ -1,0 +1,147 @@
+"""The calibrated success-rate surfaces reproduce the paper's observations."""
+
+import pytest
+
+from repro.core import calibration as cal
+from repro.core.errormodel import ErrorModel
+
+em = ErrorModel("H")
+em_m = ErrorModel("M")
+em_s = ErrorModel("S")
+
+
+def test_obs1_simra_anchors():
+    for n, s in cal.SIMRA_SUCCESS_BEST.items():
+        assert em.simra_success(n) == pytest.approx(s, abs=1e-6)
+
+
+def test_obs2_timing_cliff():
+    best = em.simra_success(8, t1=1.5, t2=3.0)
+    worst = em.simra_success(8, t1=1.5, t2=1.5)
+    assert worst / best == pytest.approx(1 - 0.2174, rel=1e-2)
+
+
+def test_obs3_temperature_small_effect():
+    drop = 1 - em.simra_success(32, temp_c=90.0) / em.simra_success(32)
+    assert drop == pytest.approx(0.0007, abs=2e-4)
+
+
+def test_obs4_vpp_small_effect():
+    drop = 1 - em.simra_success(32, vpp_v=2.1) / em.simra_success(32)
+    assert drop <= 0.0041 + 1e-6
+
+
+def test_obs7_maj3_timing_optimum():
+    best = em.majx_success(3, 32, t1=1.5, t2=3.0)
+    second = em.majx_success(3, 32, t1=3.0, t2=3.0)
+    assert best == pytest.approx(0.9900, abs=1e-6)
+    assert best / second == pytest.approx(1.455, rel=1e-3)
+
+
+def test_obs8_majx_anchors():
+    for x, s in cal.MAJX_SUCCESS_32ROW.items():
+        assert em.majx_success(x, 32) == pytest.approx(s, abs=1e-6)
+
+
+def test_obs6_replication_gain():
+    gain = em.majx_success(3, 32) / em.majx_success(3, 4)
+    assert gain == pytest.approx(1.3081, rel=1e-3)
+
+
+def test_obs10_replication_gains():
+    for x, g in cal.MAJX_REPLICATION_GAIN_REL.items():
+        n_min = cal.min_activation_for(x)
+        gain = em.majx_success(x, 32) / em.majx_success(x, n_min)
+        assert gain == pytest.approx(1 + g, rel=1e-3)
+
+
+def test_replication_monotone():
+    for x in (3, 5, 7, 9):
+        levels = [n for n in cal.N_ACT_LEVELS if n >= cal.min_activation_for(x)]
+        vals = [em.majx_success(x, n) for n in levels]
+        assert vals == sorted(vals)
+
+
+def test_obs9_pattern_effect():
+    for x in (3, 5, 7, 9):
+        rnd = em.majx_success(x, 32, pattern="random")
+        fixed = em.majx_success(x, 32, pattern="0x00/0xFF")
+        assert fixed > rnd
+        assert 1 - rnd / fixed == pytest.approx(
+            cal.MAJX_RANDOM_BELOW_FIXED_REL[x], rel=5e-2)
+
+
+def test_obs11_obs12_temperature():
+    # temperature helps MAJX; replication damps the sensitivity
+    v4 = em.majx_success(3, 4, temp_c=90.0) / em.majx_success(3, 4) - 1
+    v32 = em.majx_success(3, 32, temp_c=90.0) / em.majx_success(3, 32) - 1
+    assert v4 == pytest.approx(0.1520, rel=5e-2)
+    assert v32 <= 0.0165 + 1e-3
+    assert v4 > v32 > 0
+
+
+def test_obs13_vpp_effect_small():
+    v = 1 - em.majx_success(5, 32, vpp_v=2.1) / em.majx_success(5, 32)
+    assert v == pytest.approx(0.011, rel=1e-2)
+
+
+def test_obs14_mrc_anchors():
+    for n, s in cal.MRC_SUCCESS_BEST.items():
+        assert em.mrc_success(n) == pytest.approx(s, abs=1e-6)
+
+
+def test_obs15_mrc_low_t1():
+    worst = em.mrc_success(31, t1=1.5)
+    second_worst = em.mrc_success(31, t1=3.0)
+    assert 1 - worst / second_worst == pytest.approx(0.4979, rel=1e-3)
+
+
+def test_obs16_mrc_all1_pattern():
+    base = em.mrc_success(31)
+    all1 = em.mrc_success(31, pattern="0xFF")
+    assert 1 - all1 / base == pytest.approx(0.0079, rel=1e-2)
+    small = 1 - em.mrc_success(15, pattern="0xFF") / em.mrc_success(15)
+    assert small <= 0.0011 + 1e-6
+
+
+def test_obs17_obs18_mrc_env():
+    t = 1 - em.mrc_success(31, temp_c=90.0) / em.mrc_success(31)
+    v = 1 - em.mrc_success(31, vpp_v=2.1) / em.mrc_success(31)
+    assert abs(t) == pytest.approx(0.0004, abs=2e-4)
+    assert v <= 0.0132 + 1e-6
+
+
+def test_abstract_env_bounds_all_ops():
+    """Abstract: <=2.13 % (temp) / <=1.32 % (VPP) across all tested ops."""
+    ops = []
+    for n in cal.N_ACT_LEVELS:
+        ops.append(lambda t=50.0, v=2.5, n=n: em.simra_success(n, temp_c=t, vpp_v=v))
+    for x in (3, 5, 7, 9):
+        ops.append(lambda t=50.0, v=2.5, x=x: em.majx_success(x, 32, temp_c=t, vpp_v=v))
+    for n in cal.MRC_SUCCESS_BEST:
+        ops.append(lambda t=50.0, v=2.5, n=n: em.mrc_success(n, temp_c=t, vpp_v=v))
+    for op in ops:
+        base = op()
+        assert abs(op(t=90.0) / base - 1) <= 0.16  # MAJ3@4 is the outlier
+        assert abs(op(v=2.1) / base - 1) <= cal.ALL_OPS_VPP_VARIATION_MAX_REL + 1e-6
+
+
+def test_samsung_no_pud():
+    """§9 Limitation 1: Samsung shows no SiMRA, no MAJX, no Multi-RowCopy."""
+    assert em_s.simra_success(32) == 0.0
+    assert em_s.majx_success(3, 4) == 0.0
+    assert em_s.mrc_success(31) == 0.0
+    # …but plain RowClone still works
+    assert em_s.mrc_success(1, t1=36.0, t2=6.0) > 0.999
+
+
+def test_mfr_m_caps_at_maj7():
+    """fn 11: MAJ9+ on Mfr M has <1 % success."""
+    assert em_m.majx_success(9, 32) < 0.01
+    assert em_m.majx_success(7, 32) == pytest.approx(0.3387, abs=1e-4)
+
+
+def test_fn6_consecutive_activation_degenerates():
+    """t2 >= 6 ns degenerates to a RowClone (only one destination)."""
+    assert em.mrc_success(31, t2=6.0) < 0.1
+    assert em.simra_success(32, t1=3.0, t2=6.0) == 0.0

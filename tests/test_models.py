@@ -1,0 +1,176 @@
+"""Model-zoo component tests: attention paths, Mamba2, MoE, xLSTM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config
+from repro.models import attention as A
+from repro.models import mamba2, xlstm
+from repro.models import model as M
+
+
+def _mk_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=128)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ----------------------------------------------------------- attention
+
+
+def test_streaming_matches_dense():
+    cfg = _mk_cfg()
+    key = jax.random.PRNGKey(0)
+    p, _ = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 64, 64), jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    dense = A.attention_forward(p, x, pos, cfg, streaming_threshold=10**9)
+    stream = A.attention_forward(p, x, pos, cfg, streaming_threshold=1)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(stream),
+                               atol=2e-5)
+
+
+def test_sliding_window_masks_distant_tokens():
+    cfg = _mk_cfg(sliding_window=8)
+    key = jax.random.PRNGKey(1)
+    p, _ = A.init_attention(key, cfg)
+    x = jax.random.normal(key, (1, 32, 64), jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(32), (1, 32))
+    out_full = A.attention_forward(p, x, pos, cfg)
+    # changing a token > window away must not change the output at t=31
+    x2 = x.at[:, 5].set(1.0)
+    out2 = A.attention_forward(p, x2, pos, cfg)
+    np.testing.assert_allclose(np.asarray(out_full[:, 31]),
+                               np.asarray(out2[:, 31]), atol=1e-5)
+    assert not np.allclose(np.asarray(out_full[:, 6]), np.asarray(out2[:, 6]))
+
+
+def test_gqa_equals_mha_when_kv_equals_heads():
+    cfg_mha = _mk_cfg(n_kv_heads=4)
+    key = jax.random.PRNGKey(2)
+    p, _ = A.init_attention(key, cfg_mha)
+    x = jax.random.normal(key, (2, 16, 64), jnp.float32) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    out = A.attention_forward(p, x, pos, cfg_mha)
+    assert out.shape == (2, 16, 64)
+
+
+def test_prefill_then_decode_matches_forward():
+    """Incremental decode reproduces teacher-forced logits."""
+    cfg = _mk_cfg(n_layers=2)
+    key = jax.random.PRNGKey(3)
+    params, _ = M.init(key, cfg)
+    toks = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    logits_full, _ = M.forward(params, {"tokens": toks}, cfg)
+    logits_pre, cache = M.prefill(params, {"tokens": toks[:, :8]}, cfg,
+                                  max_seq=16)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]),
+                               np.asarray(logits_full[:, 7]), atol=2e-3)
+    lg = logits_pre
+    for t in range(8, 12):
+        lg, cache = M.decode(params, toks[:, t:t + 1], cache, cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(logits_full[:, t]), atol=2e-3)
+
+
+def test_swa_rolling_cache_decode():
+    """Rolling-window decode matches full forward within the window."""
+    cfg = _mk_cfg(sliding_window=8, n_layers=1)
+    key = jax.random.PRNGKey(4)
+    params, _ = M.init(key, cfg)
+    toks = jax.random.randint(key, (1, 20), 0, cfg.vocab_size)
+    logits_full, _ = M.forward(params, {"tokens": toks}, cfg)
+    _, cache = M.prefill(params, {"tokens": toks[:, :16]}, cfg, max_seq=32)
+    lg, cache = M.decode(params, toks[:, 16:17], cache, cfg)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(logits_full[:, 16]), atol=2e-3)
+
+
+# ----------------------------------------------------------- mamba2
+
+
+def test_mamba2_chunked_matches_recurrence():
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    key = jax.random.PRNGKey(5)
+    p, _ = mamba2.init_mamba2(key, cfg)
+    x = jax.random.normal(key, (2, 24, cfg.d_model), jnp.float32) * 0.3
+    y_chunk, st = mamba2.mamba2_forward(p, x, cfg)
+    y_ref = mamba2.mamba2_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_ref),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_mamba2_state_continuation():
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    key = jax.random.PRNGKey(6)
+    p, _ = mamba2.init_mamba2(key, cfg)
+    x = jax.random.normal(key, (1, 16, cfg.d_model), jnp.float32) * 0.3
+    y_all, _ = mamba2.mamba2_forward(p, x, cfg)
+    y1, st = mamba2.mamba2_forward(p, x[:, :8], cfg)
+    ys = [y1]
+    for t in range(8, 16):
+        y, st = mamba2.mamba2_decode(p, x[:, t:t + 1], cfg, st)
+        ys.append(y)
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_all), np.asarray(y_cat),
+                               atol=3e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------- xlstm
+
+
+def test_mlstm_chunked_matches_stepwise():
+    cfg = get_config("xlstm-125m", smoke=True)
+    key = jax.random.PRNGKey(7)
+    p, _ = xlstm.init_mlstm(key, cfg)
+    x = jax.random.normal(key, (2, 40, cfg.d_model), jnp.float32) * 0.5
+    y1, st1 = xlstm.mlstm_forward(p, x, cfg, chunk=8)
+    y2, st2 = xlstm.mlstm_forward_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st1.c), np.asarray(st2.c),
+                               atol=2e-5)
+
+
+def test_mlstm_decode_continues_chunked_state():
+    cfg = get_config("xlstm-125m", smoke=True)
+    key = jax.random.PRNGKey(8)
+    p, _ = xlstm.init_mlstm(key, cfg)
+    x = jax.random.normal(key, (1, 17, cfg.d_model), jnp.float32) * 0.5
+    y_all, _ = xlstm.mlstm_forward_reference(p, x, cfg)
+    _, st = xlstm.mlstm_forward(p, x[:, :16], cfg, chunk=8)
+    y_last, _ = xlstm.mlstm_decode(p, x[:, 16:], cfg, st)
+    np.testing.assert_allclose(np.asarray(y_all[:, -1:]),
+                               np.asarray(y_last), atol=3e-5)
+
+
+# ----------------------------------------------------------- moe
+
+
+def test_moe_top1_equals_dense_expert():
+    """With 1 expert and top-1 routing, MoE == that expert's SwiGLU."""
+    cfg = _mk_cfg(family="moe", n_experts=1, top_k=1, capacity_factor=4.0)
+    from repro.models.moe import init_moe, moe_forward
+
+    key = jax.random.PRNGKey(9)
+    p, _ = init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 8, 64), jnp.float32) * 0.3
+    out, aux = moe_forward(p, x, cfg)
+    want = (jax.nn.silu(x @ p["w_gate"][0]) * (x @ p["w_up"][0])) @ p["w_down"][0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_moe_routing_mass_conservation():
+    cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
+    from repro.models.moe import init_moe, moe_forward
+
+    key = jax.random.PRNGKey(10)
+    p, _ = init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32) * 0.3
+    out, aux = moe_forward(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # aux >= 1 at/above perfect balance
+    assert jnp.isfinite(out).all()

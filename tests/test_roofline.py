@@ -1,0 +1,99 @@
+"""Roofline machinery: collective parser, composition, analytic FLOPs."""
+
+import pytest
+
+from repro.configs.registry import SHAPES, get_config
+from repro.launch import roofline as rl
+
+HLO_SAMPLE = """
+  %ag = bf16[16,4096,256]{2,1,0} all-gather(%x), replica_groups=..., metadata={op_name="jit(step)/jvp/while/body/dot" }
+  %ar = f32[4096,4096]{1,0} all-reduce(%y), metadata={op_name="jit(step)/outer/dot"}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), metadata={op_name="jit(step)/opt"}
+  %a2a = (f32[64,64]{1,0}) all-to-all(%w), metadata={op_name="jit(step)/while/body/moe"}
+  %cp = u32[1024]{0} collective-permute(%q), metadata={op_name="jit(step)/ring"}
+"""
+
+
+def test_collective_parser_bytes_and_kinds():
+    stats = rl.collective_bytes(HLO_SAMPLE, loop_multiplier=10)
+    # all-gather inside while: 16*4096*256*2 bytes * 10
+    assert stats.bytes_by_kind["all-gather"] == 16 * 4096 * 256 * 2 * 10
+    # all-reduce outside while: 2x operand bytes
+    assert stats.bytes_by_kind["all-reduce"] == 4096 * 4096 * 4 * 2
+    assert stats.bytes_by_kind["reduce-scatter"] == 8 * 128 * 2
+    assert stats.bytes_by_kind["all-to-all"] == 64 * 64 * 4 * 10
+    assert stats.bytes_by_kind["collective-permute"] == 1024 * 4
+    assert stats.n_ops == 5
+    assert stats.dominant == "all-gather"
+
+
+def test_composition_transformer():
+    cfg = get_config("chatglm3-6b")
+    pts = {0: rl.CostPoint(flops=100.0, bytes_accessed=10.0),
+           1: rl.CostPoint(flops=150.0, bytes_accessed=14.0)}
+    c = rl.compose(cfg, pts)
+    assert c.flops == 100 + 28 * 50
+    assert c.bytes_accessed == 10 + 28 * 4
+
+
+def test_composition_hybrid():
+    cfg = get_config("zamba2-1.2b")  # 38 layers, attn every 6
+    pts = {0: rl.CostPoint(10.0, 1.0),
+           6: rl.CostPoint(10.0 + 5.0 + 3.0, 1.0 + 0.5 + 0.3),
+           7: rl.CostPoint(10.0 + 5.0 + 3.0 + 5.0, 1.0 + 0.5 + 0.3 + 0.5)}
+    c = rl.compose(cfg, pts)
+    # body=5, attn=3, n_full=6 -> 10 + 38*5 + 6*3
+    assert c.flops == pytest.approx(10 + 38 * 5 + 6 * 3)
+
+
+def test_compose_seq_linear():
+    pts = {64: rl.CostPoint(100.0, 50.0), 128: rl.CostPoint(164.0, 82.0)}
+    c = rl.compose_seq(4096, pts)
+    assert c.flops == pytest.approx(100 + (4096 - 64) * 1.0)
+
+
+def test_model_flops_scales():
+    cfg = get_config("chatglm3-6b")
+    f_train = rl.model_flops(cfg, SHAPES["train_4k"])
+    f_prefill = rl.model_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = rl.model_flops(cfg, SHAPES["decode_32k"])
+    # training is fwd+bwd on 1M tokens; prefill is fwd on 1M tokens but
+    # carries a 32k^2 attention term, so the ratio is ~2 rather than ~3
+    assert f_train > 1.5 * f_prefill
+    assert f_decode < f_prefill / 100
+    # ~6ND sanity: chatglm3 ~6.2B params, 1M tokens
+    n = cfg.n_params()
+    assert f_train == pytest.approx(6 * n * 1048576, rel=0.25)
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.n_active_params() < cfg.n_params() / 2.5
+    f = rl.model_flops(cfg, SHAPES["train_4k"])
+    assert f < 6 * cfg.n_params() * 1048576
+
+
+def test_report_bottleneck_and_fraction():
+    r = rl.RooflineReport(
+        arch="a", shape="s", mesh="16x16", n_chips=256,
+        flops_per_chip=1e12, bytes_per_chip=1e9, coll_bytes_per_chip=1e9,
+        coll_dominant_kind="all-gather", model_flops_global=200e12,
+        mem_per_chip_bytes=8 * 2**30)
+    assert r.t_compute == pytest.approx(1e12 / rl.PEAK_FLOPS)
+    assert r.bottleneck == "collective"
+    assert 0 < r.roofline_fraction < 1
+    row = r.row()
+    assert row["bottleneck"] == "collective"
+
+
+def test_long500k_gating():
+    from repro.configs.shapes import shape_applicable
+
+    ok, _ = shape_applicable(get_config("mixtral-8x22b"), SHAPES["long_500k"])
+    assert ok  # SWA
+    ok, why = shape_applicable(get_config("gemma-7b"), SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    ok, _ = shape_applicable(get_config("xlstm-125m"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = shape_applicable(get_config("zamba2-1.2b"), SHAPES["long_500k"])
+    assert ok

@@ -1,0 +1,126 @@
+"""Behavioural subarray simulator: MAJX / Multi-RowCopy / SiMRA semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import rand_u32, sweep
+from repro.core import calibration as cal
+from repro.core import commands as cmd
+from repro.core import majx as mj
+from repro.core import rowcopy as rc
+from repro.core.subarray import DeviceProfile, Subarray
+
+
+def _ops(rng, x, words):
+    return [jnp.asarray(rand_u32(rng, words)) for _ in range(x)]
+
+
+@sweep(8)
+def test_ideal_majx_matches_boolean_majority(rng):
+    x = int(rng.choice([3, 5, 7, 9]))
+    n_act = int(rng.choice([n for n in (4, 8, 16, 32) if n >= x]))
+    sa = Subarray(cols=512, ideal=True)
+    ops = _ops(rng, x, sa.n_words)
+    got = mj.majx(sa, ops, n_act)
+    want = mj.majx_reference(jnp.stack(ops))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_measured_success_tracks_calibration():
+    rng = np.random.default_rng(0)
+    for x, n_act in [(3, 4), (3, 32), (5, 32), (7, 32)]:
+        accs = []
+        for seed in range(3):
+            sa = Subarray(cols=4096, seed=seed)
+            accs.append(mj.majx_success_measured(
+                sa, _ops(rng, x, sa.n_words), n_act))
+        want = sa.errors.majx_success(x, n_act)
+        assert np.mean(accs) == pytest.approx(want, abs=0.02), (x, n_act)
+
+
+def test_and_or_via_maj3():
+    rng = np.random.default_rng(1)
+    sa = Subarray(cols=256, ideal=True)
+    a, b = _ops(rng, 2, sa.n_words)
+    assert (np.asarray(mj.and_via_maj3(sa, a, b)) == np.asarray(a & b)).all()
+    assert (np.asarray(mj.or_via_maj3(sa, a, b)) == np.asarray(a | b)).all()
+
+
+def test_multi_rowcopy_ideal():
+    rng = np.random.default_rng(2)
+    sa = Subarray(cols=256, ideal=True)
+    src = jnp.asarray(rand_u32(rng, sa.n_words))
+    src_row, dests = rc.multi_rowcopy(sa, src, 32)
+    assert len(dests) == 31
+    for d in dests:
+        assert (np.asarray(sa.read_row(d)) == np.asarray(src)).all()
+
+
+def test_multi_rowcopy_success_rate():
+    """All-0 src into all-1 rows: every failed cell is visible."""
+    sa = Subarray(cols=8192, seed=3)
+    sa.fill("0xFF")
+    src = jnp.zeros((sa.n_words,), jnp.uint32)
+    acc = rc.mrc_success_measured(sa, src, 32)
+    assert acc == pytest.approx(cal.MRC_SUCCESS_BEST[31], abs=5e-4)
+
+
+def test_simra_wr_overdrive():
+    """§3.2 methodology: APA + WR updates all simultaneously open rows."""
+    sa = Subarray(cols=256, ideal=True)
+    sa.fill("0x00")
+    pattern = np.full((sa.n_words,), 0xDEADBEEF, np.uint32)
+    rf, rs = sa.decoder.pair_for_n_rows(8, 0)
+    sa.run(cmd.apa_with_wr(rf, rs, 3.0, 3.0, pattern))
+    group = sa.decoder.apa_activated_rows(rf, rs)
+    assert len(group) == 8
+    for r in group:
+        assert (np.asarray(sa.read_row(r)) == pattern).all()
+    # rows outside the group untouched (Limitation 3 check)
+    outside = [r for r in range(sa.rows) if r not in group][:16]
+    for r in outside:
+        assert (np.asarray(sa.read_row(r)) == 0).all()
+
+
+def test_rowclone_fn6():
+    sa = Subarray(cols=256, ideal=True)
+    rng = np.random.default_rng(4)
+    src = jnp.asarray(rand_u32(rng, sa.n_words))
+    sa.write_row(5, src)
+    rc.rowclone(sa, 5, 9)
+    assert (np.asarray(sa.read_row(9)) == np.asarray(src)).all()
+
+
+def test_frac_rows_are_neutral_in_majority():
+    """MAJ3 with 4-row activation: the 4th (Frac) row must not vote."""
+    sa = Subarray(cols=256, ideal=True)
+    ones = jnp.full((sa.n_words,), 0xFFFFFFFF, jnp.uint32)
+    zeros = jnp.zeros((sa.n_words,), jnp.uint32)
+    got = mj.majx(sa, [ones, zeros, ones], 4)
+    assert (np.asarray(got) == 0xFFFFFFFF).all()
+
+
+def test_samsung_profile_no_simra():
+    sa = Subarray(DeviceProfile.mfr_s(), cols=256, ideal=True)
+    sa.fill("0x00")
+    rng = np.random.default_rng(5)
+    src = jnp.asarray(rand_u32(rng, sa.n_words))
+    sa.write_row(0, src)
+    rf, rs = sa.decoder.pair_for_n_rows(4, 0)
+    sa.run(cmd.apa(rf, rs, 3.0, 3.0))
+    # chip ignored the violated timing: only rs activated, nothing written
+    group = sa.decoder.apa_activated_rows(rf, rs)
+    for r in group:
+        if r not in (0,):
+            assert (np.asarray(sa.read_row(r)) == 0).all()
+
+
+def test_mfr_m_majx_via_bias():
+    """Mfr M has no Frac but neutral rows via sense-amp bias (§3.3 fn 5)."""
+    sa = Subarray(DeviceProfile.mfr_m(), cols=256, ideal=True)
+    rng = np.random.default_rng(6)
+    ops = _ops(rng, 3, sa.n_words)
+    got = mj.majx(sa, ops, 4)
+    want = mj.majx_reference(jnp.stack(ops))
+    assert (np.asarray(got) == np.asarray(want)).all()
