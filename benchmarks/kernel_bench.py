@@ -1,5 +1,7 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp oracle timing,
-plus the analytic TPU-side traffic model for each kernel."""
+"""Kernel micro-benchmarks through the backend registry: the ``pallas``
+backend (interpret) vs the ``oracle`` reference on identical inputs,
+plus the analytic TPU-side traffic model for each kernel.  Swapping the
+one-string backend name re-prices every row on a different executor."""
 
 from __future__ import annotations
 
@@ -9,13 +11,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.bitserial.ops import bitserial_add
-from repro.kernels.bitserial.ref import bitserial_add_ref
-from repro.kernels.majx.ops import majx
-from repro.kernels.majx.ref import majx_ref
-from repro.kernels.mismatch.ops import mismatch_count
-from repro.kernels.mismatch.ref import mismatch_count_ref
-from repro.kernels.rowcopy.ops import fanout
+from repro.backends import ExecutionContext, get_backend
+
+#: One-string config choice: which executor the benchmark rows measure.
+BENCH_BACKEND = "pallas"
+REF_BACKEND = "oracle"
 
 
 def _timeit(fn, reps=3):
@@ -28,35 +28,44 @@ def _timeit(fn, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def kernel_benchmarks():
+def kernel_benchmarks(backend: str = BENCH_BACKEND):
+    ctx = ExecutionContext()
+    be = get_backend(backend, ctx)
+    ref = get_backend(REF_BACKEND, ctx)
     rng = np.random.default_rng(0)
     rows = []
 
     x = jnp.asarray(rng.integers(0, 2**32, (9, 64, 2048), dtype=np.uint32))
-    us_ref = _timeit(jax.jit(majx_ref), reps=3) if False else _timeit(
-        lambda: majx_ref(x))
-    us_k = _timeit(lambda: majx(x))
+    us_ref = _timeit(lambda: ref.majx(x))
+    us_k = _timeit(lambda: be.majx(x))
     # HBM traffic model on TPU: read 9 planes + write 1
     traffic = x.nbytes * 10 / 9
-    rows.append(("kernel_majx9_64x2048", us_k,
+    rows.append((f"kernel_majx9_64x2048[{backend}]", us_k,
                  f"ref_us={us_ref:.0f};tpu_bytes={traffic:.0f}"))
 
     a = jnp.asarray(rng.integers(0, 2**32, (32, 16, 512), dtype=np.uint32))
     b = jnp.asarray(rng.integers(0, 2**32, (32, 16, 512), dtype=np.uint32))
-    us_ref = _timeit(lambda: bitserial_add_ref(a, b))
-    us_k = _timeit(lambda: bitserial_add(a, b))
+    us_ref = _timeit(lambda: ref.add_planes(a, b))
+    us_k = _timeit(lambda: be.add_planes(a, b))
     # fused kernel: one round trip; naive plane-at-a-time: 32 round trips
-    rows.append(("kernel_bitserial_add_32x16x512", us_k,
+    rows.append((f"kernel_bitserial_add_32x16x512[{backend}]", us_k,
                  f"ref_us={us_ref:.0f};traffic_reduction=32x"))
 
     src = jnp.asarray(rng.integers(0, 2**32, (8, 4096), dtype=np.uint32))
-    us_k = _timeit(lambda: fanout(src, 31))
-    rows.append(("kernel_fanout31_8x4096", us_k,
+    us_k = _timeit(lambda: be.rowcopy(src, 31))
+    rows.append((f"kernel_fanout31_8x4096[{backend}]", us_k,
                  f"hbm_read_bytes={src.nbytes};write={src.nbytes*31}"))
 
     g = jnp.asarray(rng.integers(0, 2**32, (1 << 18,), dtype=np.uint32))
     w = jnp.asarray(rng.integers(0, 2**32, (1 << 18,), dtype=np.uint32))
-    us_ref = _timeit(lambda: mismatch_count_ref(g, w))
-    us_k = _timeit(lambda: mismatch_count(g, w))
-    rows.append(("kernel_mismatch_1M_cells", us_k, f"ref_us={us_ref:.0f}"))
+    us_ref = _timeit(lambda: ref.mismatch(g, w))
+    us_k = _timeit(lambda: be.mismatch(g, w))
+    rows.append((f"kernel_mismatch_1M_cells[{backend}]", us_k,
+                 f"ref_us={us_ref:.0f}"))
+
+    # vmapped batch dispatch (native on pallas, loop elsewhere)
+    xb = jnp.asarray(rng.integers(0, 2**32, (4, 5, 16, 512), dtype=np.uint32))
+    us_k = _timeit(lambda: be.majx_batch(xb))
+    rows.append((f"kernel_majx5_batch4_16x512[{backend}]", us_k,
+                 f"native_batch={be.capabilities().native_batch}"))
     return rows

@@ -13,12 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import get_backend
 from repro.core import calibration as cal
 from repro.core import chargeshare as cs
 from repro.core import power as pw
 from repro.core.errormodel import ErrorModel
 from repro.pud import latency as lat
-from repro.pud.arith import run_elementwise
 from repro.pud.secure_erase import destruction_time_ns, speedup_over_rowclone
 
 
@@ -193,7 +193,9 @@ def _microbench_time_ns(op: str, mfr: str, tier: int) -> float:
     a = rng.integers(0, 2**32, 8, dtype=np.uint32)
     b = np.maximum(rng.integers(0, 2**32, 8, dtype=np.uint32), 1)
     n_act = 4 if tier == 3 else 32
-    _, prog = run_elementwise(op, a, b, tier=tier, n_act=n_act)
+    # Programs are backend-invariant; the oracle is the cheapest compiler.
+    _, prog = get_backend("oracle").elementwise(op, a, b, tier=tier,
+                                                n_act=n_act)
     bg = cal.MAJX_BEST_GROUP_SUCCESS[mfr]
     bg3_baseline = cal.MAJ3_4ROW_BEST_GROUP_SUCCESS[mfr]
 

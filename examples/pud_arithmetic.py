@@ -5,23 +5,33 @@ reproducing the structure of the paper's Fig. 16.
 Usage:  PYTHONPATH=src python examples/pud_arithmetic.py
 """
 
+import os
+import sys
+
 import numpy as np
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
 from benchmarks.paper_figures import _microbench_time_ns
+from repro.backends import get_backend
 from repro.core import calibration as cal
-from repro.pud.arith import run_elementwise
+
+#: one-string backend choice ("oracle" compiles/computes the programs;
+#: swap for "pallas" or "sim" to execute the same gates elsewhere).
+BACKEND = "oracle"
 
 
 def main():
     rng = np.random.default_rng(0)
     a = rng.integers(0, 2**32, 32, dtype=np.uint32)
     b = np.maximum(rng.integers(0, 2**32, 32, dtype=np.uint32), 1)
+    backend = get_backend(BACKEND)
 
     print("op   tier  DRAM-ops   exact   modeled-us")
     for op in cal.MICROBENCHMARKS:
         for tier in (3, 5, 7):
-            out, prog = run_elementwise(op, a, b, tier=tier,
-                                        n_act=32 if tier > 3 else 4)
+            out, prog = backend.elementwise(op, a, b, tier=tier,
+                                            n_act=32 if tier > 3 else 4)
             ref = {"and": a & b, "or": a | b, "xor": a ^ b,
                    "add": (a + b).astype(np.uint32),
                    "sub": (a - b).astype(np.uint32),

@@ -1,70 +1,90 @@
-"""Quickstart: the paper's PUD operations through the public API.
+"""Quickstart: the paper's PUD operations through the backend registry.
+
+One :class:`Program` / op set, three interchangeable executors behind
+``get_backend(name)`` — the paper's central point, as an API:
+
+  * ``oracle``  pure bitwise reference (ground truth),
+  * ``sim``     behavioural DRAM model with the calibrated error surfaces,
+  * ``pallas``  bulk TPU kernels (interpret mode on CPU).
 
 Runs in ~30s on CPU:
-  1. simultaneous many-row activation on the behavioural DRAM model,
-  2. MAJ5 with input replication (the paper's headline capability),
-  3. Multi-RowCopy 1 -> 31,
-  4. majority-based 32-bit addition compiled to a PUD program + its
+  1. simultaneous many-row activation success (calibrated model),
+  2. MAJ5 with input replication on every backend — identical results
+     when ideal, paper-calibrated success rates when not (Obs 10),
+  3. Multi-RowCopy 1 -> 31 parity across backends,
+  4. an addressed PUD Program executed by all three backends + its
      latency/energy under the calibrated model,
-  5. the same majority logic as a TPU Pallas kernel (interpret mode).
+  5. majority-based 32-bit addition compiled once, executed per backend.
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import ExecutionContext, available_backends, get_backend
 from repro.core import calibration as cal
-from repro.core import majx, rowcopy
 from repro.core.errormodel import ErrorModel
-from repro.core.subarray import Subarray
-from repro.kernels.majx.ops import majx as majx_kernel
-from repro.pud.arith import run_elementwise
+from repro.pud.isa import Program
+
+BACKENDS = ("oracle", "sim", "pallas")
 
 
 def main():
     rng = np.random.default_rng(0)
+    ideal = ExecutionContext(ideal=True)
 
     # 1) simultaneous many-row activation -------------------------------
-    sa = Subarray(cols=1024, seed=0)
     em = ErrorModel("H")
     print("== SiMRA: N-row activation success (calibrated to Obs 1) ==")
     for n in cal.N_ACT_LEVELS:
         print(f"  {n:2d}-row activation: {em.simra_success(n)*100:.2f}%")
 
-    # 2) MAJ5 with input replication -------------------------------------
-    ops = [jnp.asarray(rng.integers(0, 2**32, 32, dtype=np.uint32))
-           for _ in range(5)]
-    print("\n== MAJ5: success with/without input replication (Obs 10) ==")
+    # 2) MAJ5 with input replication across backends ---------------------
+    planes = jnp.asarray(rng.integers(0, 2**32, (5, 32), dtype=np.uint32))
+    want = get_backend("oracle").majx(planes)
+    print(f"\n== MAJ5 on every backend (registry: {available_backends()}) ==")
+    for name in BACKENDS:
+        got = get_backend(name, ideal).majx(planes, n_act=32)
+        print(f"  {name:7s} (ideal): bit-exact={bool((got == want).all())}")
     for n_act in (8, 32):
-        sa = Subarray(cols=1024, seed=1)
-        acc = majx.majx_success_measured(sa, ops, n_act)
-        print(f"  MAJ5 @ {n_act:2d}-row activation: measured {acc*100:.1f}% "
-              f"(model {em.majx_success(5, n_act)*100:.1f}%)")
+        sim = get_backend("sim", ExecutionContext(seed=1))
+        acc = sim.success_rate(sim.majx(planes, n_act=n_act), want)
+        print(f"  sim MAJ5 @ {n_act:2d}-row activation: measured "
+              f"{acc*100:.1f}% (model {em.majx_success(5, n_act)*100:.1f}%, "
+              f"Obs 10 replication gain)")
 
     # 3) Multi-RowCopy ----------------------------------------------------
-    sa = Subarray(cols=1024, seed=2, ideal=True)
-    src = jnp.asarray(rng.integers(0, 2**32, sa.n_words, dtype=np.uint32))
-    _, dests = rowcopy.multi_rowcopy(sa, src, 32)
-    ok = all(bool((sa.read_row(d) == src).all()) for d in dests)
-    print(f"\n== Multi-RowCopy: 1 source -> {len(dests)} destinations, "
-          f"bit-exact={ok} ==")
+    src = jnp.asarray(rng.integers(0, 2**32, (32,), dtype=np.uint32))
+    copies = {n: get_backend(n, ideal).rowcopy(src, 31) for n in BACKENDS}
+    ok = all(bool((c == src).all()) for c in copies.values())
+    print(f"\n== Multi-RowCopy 1 -> 31 on all backends, bit-exact={ok} ==")
 
-    # 4) majority-based arithmetic (§8.1) --------------------------------
+    # 4) one addressed Program, three executors ---------------------------
+    prog = Program()
+    prog.emit("MAJ", x=3, n_act=4, srcs=(0, 1, 2), dsts=(3,))
+    prog.emit("NOT", srcs=(3,), dsts=(4,))
+    prog.emit("MRC", n_act=8, srcs=(4,), dsts=tuple(range(5, 12)))
+    state = jnp.asarray(rng.integers(0, 2**32, (12, 8), dtype=np.uint32))
+    finals = [np.asarray(get_backend(n, ideal).run(prog, state))
+              for n in BACKENDS]
+    agree = all((f == finals[0]).all() for f in finals)
+    print(f"\n== Program({len(prog.ops)} ops) via "
+          f"{'/'.join(BACKENDS)}: states agree={agree}; "
+          f"{prog.latency_ns(em):.0f} ns / {prog.energy_nj(em):.0f} nJ "
+          f"modeled ==")
+
+    # 5) majority-based arithmetic (§8.1), compiled per backend ----------
     a = rng.integers(0, 2**32, 64, dtype=np.uint32)
     b = rng.integers(0, 2**32, 64, dtype=np.uint32)
-    out, prog = run_elementwise("add", a, b, tier=5, n_act=32)
-    assert (np.asarray(out) == (a + b).astype(np.uint32)).all()
-    lat_us = prog.latency_ns(em, pipelined=True, best_group=True) / 1e3
-    print(f"\n== PUD 32-bit ADD (MAJ5 construction): {len(prog.ops)} DRAM "
-          f"ops, {lat_us:.1f} us modeled, bit-exact vs numpy ==")
+    for name in BACKENDS:
+        out, prog = get_backend(name, ideal).elementwise(
+            "add", a, b, tier=5, n_act=32)
+        assert (np.asarray(out) == (a + b).astype(np.uint32)).all(), name
+        lat_us = prog.latency_ns(em, pipelined=True, best_group=True) / 1e3
+        print(f"  32-bit ADD via {name:7s}: {len(prog.ops)} DRAM ops, "
+              f"{lat_us:.1f} us modeled, bit-exact vs numpy")
 
-    # 5) the TPU-side MAJX kernel -----------------------------------------
-    planes = jnp.asarray(rng.integers(0, 2**32, (9, 8, 512), dtype=np.uint32))
-    voted = majx_kernel(planes)
-    print(f"\n== Pallas MAJ9 kernel over {planes.shape} packed planes: "
-          f"out {voted.shape} (interpret mode, CSA bit-sliced counter) ==")
     print("\nquickstart OK")
 
 

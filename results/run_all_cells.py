@@ -1,9 +1,32 @@
 """Driver: run every (arch x shape) dry-run cell sequentially as
 subprocesses (fresh device state each), with per-arch microbatches,
-merging results into one JSON."""
+merging results into one JSON.
+
+Before launching cells it runs a PUD-backend preflight: a short parity
+check of the configured execution backend (PUD_BACKEND env or
+--pud-backend, default "pallas") against the oracle, so a bad backend
+choice fails in seconds rather than after hours of compiles."""
 import json, os, subprocess, sys, time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def pud_preflight(backend_name: str) -> None:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    import numpy as np
+    from repro.backends import ExecutionContext, get_backend
+
+    rng = np.random.default_rng(0)
+    be = get_backend(backend_name, ExecutionContext(ideal=True))
+    ref = get_backend("oracle")
+    planes = rng.integers(0, 2**32, (5, 8, 64), dtype=np.uint32)
+    assert (np.asarray(be.majx(planes))
+            == np.asarray(ref.majx(planes))).all(), backend_name
+    src = rng.integers(0, 2**32, (64,), dtype=np.uint32)
+    assert (np.asarray(be.rowcopy(src, 7))
+            == np.asarray(ref.rowcopy(src, 7))).all(), backend_name
+    print(f"[preflight] backend '{backend_name}' parity vs oracle OK",
+          flush=True)
 ARCHS = ["mixtral-8x22b", "qwen3-moe-235b-a22b", "chatglm3-6b", "gemma-7b",
          "deepseek-coder-33b", "glm4-9b", "zamba2-1.2b", "musicgen-medium",
          "xlstm-125m", "phi-3-vision-4.2b"]
@@ -13,7 +36,15 @@ MB = {"mixtral-8x22b": 8, "qwen3-moe-235b-a22b": 8}
 def main():
     multipod = "--multipod" in sys.argv
     skip_cost = "--skip-cost" in sys.argv
-    out_path = sys.argv[1]
+    backend = os.environ.get("PUD_BACKEND", "pallas")
+    args = sys.argv[1:]
+    if "--pud-backend" in args:
+        i = args.index("--pud-backend")
+        backend = args[i + 1]
+        del args[i:i + 2]
+    pud_preflight(backend)
+    # out_path: first non-flag argument, wherever the flags sit
+    out_path = next(a for a in args if not a.startswith("--"))
     results = []
     if os.path.exists(out_path):
         results = json.load(open(out_path))

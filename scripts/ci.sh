@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + a ~30s backend-parity smoke.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: full test suite =="
+python -m pytest -x -q
+
+echo "== backend-parity smoke (oracle / sim / pallas) =="
+PYTHONPATH=src python - <<'PY'
+import numpy as np
+import jax.numpy as jnp
+from repro.backends import ExecutionContext, available_backends, get_backend
+from repro.pud.isa import Program
+
+rng = np.random.default_rng(0)
+ideal = ExecutionContext(ideal=True)
+backends = {n: get_backend(n, ideal) for n in ("oracle", "sim", "pallas")}
+ref = backends["oracle"]
+
+for x in (3, 5, 7, 9):
+    planes = jnp.asarray(rng.integers(0, 2**32, (x, 2, 24), dtype=np.uint32))
+    want = np.asarray(ref.majx(planes))
+    for n, be in backends.items():
+        assert (np.asarray(be.majx(planes, n_act=32)) == want).all(), (n, x)
+
+src = jnp.asarray(rng.integers(0, 2**32, (24,), dtype=np.uint32))
+for n_dst in (1, 7, 31):
+    want = np.asarray(ref.rowcopy(src, n_dst))
+    for n, be in backends.items():
+        assert (np.asarray(be.rowcopy(src, n_dst)) == want).all(), (n, n_dst)
+
+prog = Program()
+prog.emit("MAJ", x=3, n_act=4, srcs=(0, 1, 2), dsts=(3,))
+prog.emit("MRC", n_act=4, srcs=(3,), dsts=(4, 5, 6))
+state = jnp.asarray(rng.integers(0, 2**32, (7, 8), dtype=np.uint32))
+want = np.asarray(ref.run(prog, state))
+for n, be in backends.items():
+    assert (np.asarray(be.run(prog, state)) == want).all(), n
+
+a = rng.integers(0, 2**32, 8, dtype=np.uint32)
+b = rng.integers(0, 2**32, 8, dtype=np.uint32)
+for n, be in backends.items():
+    out, _ = be.elementwise("add", a, b, tier=5, n_act=32)
+    assert (np.asarray(out) == (a + b).astype(np.uint32)).all(), n
+
+print(f"backend parity OK across {sorted(backends)} "
+      f"(registry: {available_backends()})")
+PY
+
+echo "CI OK"

@@ -1,0 +1,68 @@
+"""Unified execution backends for PUD operations.
+
+One :class:`~repro.pud.isa.Program`, three interchangeable executors:
+
+>>> from repro.backends import ExecutionContext, get_backend
+>>> be = get_backend("oracle")                  # or "sim" / "pallas"
+>>> out = be.majx(planes, x=3, n_act=32)
+>>> copies = be.rowcopy(src, 31)
+>>> bad_bits = be.mismatch(out, want)
+
+Every backend takes the same :class:`ExecutionContext` (calibration
+point, timings, temperature/voltage, interpret/tiling flags), so a
+backend is a one-string config choice everywhere — examples,
+benchmarks, the serving engine's PUD hooks, and the offload planner all
+resolve their executor here.  New executors (multi-device sharded sim,
+compiled-TPU) register with :func:`register_backend` and inherit every
+consumer for free.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Type
+
+from repro.backends.base import Backend, Capabilities  # noqa: F401
+from repro.backends.context import ExecutionContext, Timings  # noqa: F401
+
+_REGISTRY: dict[str, Type[Backend]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a Backend implementation under a name."""
+
+    def deco(cls: Type[Backend]) -> Type[Backend]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str, ctx: Optional[ExecutionContext] = None) -> Backend:
+    """Instantiate a registered backend with a shared ExecutionContext."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+    return cls(ctx)
+
+
+# Register the three shipped implementations.
+from repro.backends.oracle import OracleBackend  # noqa: E402
+from repro.backends.pallas import PallasBackend  # noqa: E402
+from repro.backends.sim import SimBackend  # noqa: E402
+
+register_backend("oracle")(OracleBackend)
+register_backend("sim")(SimBackend)
+register_backend("pallas")(PallasBackend)
+
+__all__ = [
+    "Backend", "Capabilities", "ExecutionContext", "Timings",
+    "available_backends", "get_backend", "register_backend",
+]

@@ -1,0 +1,179 @@
+"""The Backend protocol: one Program, interchangeable executors.
+
+A backend executes PUD work at three granularities through one
+interface:
+
+* **bulk entry points** — ``majx(planes, x, n_act)``,
+  ``rowcopy(src, n_dst)``, ``mismatch(a, b)``, ``add_planes(a, b)`` on
+  packed uint32 bit-planes (the layout of :mod:`repro.core.bitplanes`);
+* **programs** — ``run(program, state)`` interprets a
+  :class:`repro.pud.isa.Program` whose ops carry row addresses against a
+  ``(rows, words)`` subarray image;
+* **compiled arithmetic** — ``elementwise(op, a, b)`` drives the §8.1
+  bit-serial compiler with this backend as the gate executor, so the
+  recorded Program and the computed values come from the same run.
+
+All knobs live in one shared :class:`~repro.backends.context.ExecutionContext`.
+Implementations: ``oracle`` (pure bitwise reference), ``sim``
+(behavioural subarray with calibrated error injection), ``pallas``
+(bulk TPU kernels).  Consumers pick one with
+:func:`repro.backends.get_backend` — a backend is a one-string config
+choice, which is what makes regime comparisons (PULSAR/FCDRAM-style
+reliability-vs-throughput tradeoffs) apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.context import ExecutionContext
+from repro.pud.isa import Program
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend models / how it executes."""
+
+    name: str
+    description: str
+    #: injects the paper-calibrated per-cell error surfaces
+    stochastic: bool
+    #: executes through the behavioural Subarray/PUDDevice command model
+    device_model: bool
+    #: dispatches Pallas TPU kernels (interpret or compiled)
+    accelerated: bool
+    #: widest MAJ arity this backend can execute
+    max_majx: int
+    #: reachable simultaneous-activation counts
+    n_act_levels: tuple[int, ...]
+    #: bulk batch dispatch is vmapped (vs a python loop)
+    native_batch: bool
+
+
+class Backend(abc.ABC):
+    """Abstract executor for PUD operations (see module docstring)."""
+
+    name: str = "?"
+
+    def __init__(self, ctx: Optional[ExecutionContext] = None):
+        self.ctx = ctx or ExecutionContext()
+
+    # ------------------------------------------------------------ protocol
+    @abc.abstractmethod
+    def capabilities(self) -> Capabilities:
+        ...
+
+    @abc.abstractmethod
+    def majx(self, planes: jax.Array, x: Optional[int] = None,
+             n_act: Optional[int] = None) -> jax.Array:
+        """MAJX over X packed operand planes.
+
+        ``planes``: (X, words) or (X, R, C) uint32, X odd.  ``x`` defaults
+        to ``planes.shape[0]``; ``n_act`` (>= x, a reachable activation
+        level) defaults to ``ctx.n_act`` and selects the replication
+        ladder of §5 — it changes the *success rate*, never the logical
+        result.  Returns the majority plane, shape ``planes.shape[1:]``.
+        """
+
+    @abc.abstractmethod
+    def rowcopy(self, src: jax.Array, n_dst: int) -> jax.Array:
+        """Multi-RowCopy: replicate one row image to ``n_dst`` rows.
+
+        ``src``: (words,) or (R, C) uint32.  Returns ``(n_dst, *src.shape)``.
+        """
+
+    @abc.abstractmethod
+    def mismatch(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Total differing bits between two packed arrays (any shape)."""
+
+    @abc.abstractmethod
+    def add_planes(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Bit-serial ripple add over (NBITS, ...) packed planes."""
+
+    # ------------------------------------------------- derived bulk helpers
+    def majx_batch(self, planes: jax.Array) -> jax.Array:
+        """Batched MAJX: (B, X, R, C) -> (B, R, C).
+
+        Default is a python loop; backends with native batch dispatch
+        (``pallas``) override with a vmapped kernel call.
+        """
+        return jnp.stack([self.majx(p) for p in planes])
+
+    def success_rate(self, got: jax.Array, want: jax.Array,
+                     n_bits: Optional[int] = None) -> float:
+        """Fraction of matching bits — the paper's §3.1 metric."""
+        total = int(n_bits) if n_bits else jnp.asarray(got).size * 32
+        return 1.0 - int(self.mismatch(got, want)) / total
+
+    # -------------------------------------------------- program execution
+    def run(self, program: Program, state: jax.Array) -> jax.Array:
+        """Execute an addressed Program against a (rows, words) image.
+
+        Ops without destination addresses (cost-only streams recorded by
+        the bit-serial compiler) are skipped.  Returns the new image.
+        """
+        state = jnp.asarray(state, jnp.uint32)
+        for op in program.ops:
+            state = self._exec_op(op, state)
+        return state
+
+    def _exec_op(self, op, state: jax.Array) -> jax.Array:
+        if not op.dsts:
+            return state  # cost-only op: nothing addressable to do
+        dsts = jnp.asarray(op.dsts)
+        if op.kind == "MAJ":
+            out = self.majx(state[jnp.asarray(op.srcs)], x=op.x,
+                            n_act=op.n_act or None)
+            return state.at[dsts].set(out)
+        if op.kind == "NOT":
+            return state.at[dsts].set(self._not(state[op.srcs[0]]))
+        if op.kind == "COPY":
+            return state.at[dsts].set(self._copy(state[op.srcs[0]]))
+        if op.kind == "MRC":
+            rows = self.rowcopy(state[op.srcs[0]], len(op.dsts))
+            return state.at[dsts].set(rows)
+        if op.kind == "FRAC":
+            return self._frac(dsts, state)
+        if op.kind in ("WR", "RD"):
+            return state  # I/O accounting ops: no in-array effect
+        raise ValueError(f"unknown op kind {op.kind}")
+
+    # Per-op hooks the device-model backend overrides with command-level
+    # execution (RowClone / complement copy with calibrated errors).
+    def _not(self, plane: jax.Array) -> jax.Array:
+        return ~jnp.asarray(plane, jnp.uint32)
+
+    def _copy(self, plane: jax.Array) -> jax.Array:
+        return jnp.asarray(plane, jnp.uint32)
+
+    def _frac(self, dsts: jax.Array, state: jax.Array) -> jax.Array:
+        return state  # neutral rows don't vote; value-wise a no-op
+
+    # ------------------------------------------- §8.1 compiled arithmetic
+    def elementwise(self, op: str, a, b, tier: Optional[int] = None,
+                    n_act: Optional[int] = None):
+        """Run a §8.1 microbenchmark through this backend's gates.
+
+        Returns (uint32 results, recorded Program) — the Program prices
+        latency/energy under the shared calibration regardless of which
+        backend computed the values.
+        """
+        from repro.pud.arith import run_elementwise
+
+        return run_elementwise(
+            op, a, b, tier=tier or self.ctx.tier,
+            n_act=n_act or self.ctx.n_act, executor=self)
+
+    # GateExecutor protocol (repro.pud.arith) -----------------------------
+    def gate_maj(self, planes: Sequence[jax.Array], x: int,
+                 n_act: int) -> jax.Array:
+        return self.majx(jnp.stack([jnp.asarray(p, jnp.uint32)
+                                    for p in planes]), x=x, n_act=n_act)
+
+    def gate_not(self, p: jax.Array) -> jax.Array:
+        return self._not(p)

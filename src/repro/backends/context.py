@@ -1,0 +1,86 @@
+"""ExecutionContext: the one knob object every backend call takes.
+
+The paper's central result is that the *same* APA command sequence yields
+MAJX, Multi-RowCopy, or plain RowClone depending only on the operating
+regime — timings (t1, t2), temperature, wordline voltage, data pattern.
+``ExecutionContext`` captures exactly that regime (plus framework-side
+execution knobs: interpret mode, tile geometry, RNG seed) so that the
+regime is declared once and threaded to whichever backend executes,
+instead of today's per-call keyword soup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import calibration as cal
+from repro.core.errormodel import ErrorModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Timings:
+    """The violated-timing pairs (ns) issued per op class (§3.3/§3.4).
+
+    Defaults are the paper's best operating points: MAJX at (1.5, 3),
+    Multi-RowCopy at (36, 3), SiMRA at (3, 3).
+    """
+
+    majx_t1: float = cal.MAJX_BEST_T1_NS
+    majx_t2: float = cal.MAJX_BEST_T2_NS
+    mrc_t1: float = cal.MRC_BEST_T1_NS
+    mrc_t2: float = cal.MRC_BEST_T2_NS
+    simra_t1: float = cal.SIMRA_BEST_T1_NS
+    simra_t2: float = cal.SIMRA_BEST_T2_NS
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """Shared calibration point + execution knobs for all backends.
+
+    Operating regime (device physics; consumed by ``sim`` and by latency
+    / energy costing):
+
+    * ``mfr`` — manufacturer profile ("H" / "M" / "S", Table 1),
+    * ``timings`` — the issued (t1, t2) pairs,
+    * ``temp_c`` / ``vpp_v`` / ``pattern`` — environment (Obs 3/4, 9-13),
+    * ``ideal`` — disable stochastic error injection (pure semantics).
+
+    Compiler defaults (consumed by the bit-serial §8.1 programs):
+
+    * ``tier`` — widest MAJ gate available (3/5/7/9),
+    * ``n_act`` — simultaneous-activation count per MAJ issue.
+
+    Framework execution knobs:
+
+    * ``interpret`` — Pallas interpret mode (CPU) vs compiled TPU,
+    * ``block_r`` / ``block_c`` — VPU tile geometry for bulk kernels,
+    * ``subarray_cols`` — behavioural-sim row width (bits),
+    * ``seed`` — stable-mask RNG seed for the simulator.
+    """
+
+    mfr: str = "H"
+    timings: Timings = dataclasses.field(default_factory=Timings)
+    temp_c: float = 50.0
+    vpp_v: float = 2.5
+    pattern: str = "random"
+    ideal: bool = False
+
+    tier: int = 5
+    n_act: int = 32
+
+    interpret: bool = True
+    block_r: int = 8
+    block_c: int = 512
+    subarray_cols: int = 1024
+    seed: int = 0
+
+    @property
+    def error_model(self) -> ErrorModel:
+        return ErrorModel(self.mfr)
+
+    def env(self) -> dict:
+        """Environment kwargs understood by the ErrorModel surfaces."""
+        return {"temp_c": self.temp_c, "vpp_v": self.vpp_v}
+
+    def replace(self, **kw) -> "ExecutionContext":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,53 @@
+"""``oracle``: the pure bitwise reference backend.
+
+Executes every op with its closed-form boolean semantics (the
+``kernels/*/ref.py`` oracles + :mod:`repro.core.bitplanes`): no error
+model, no device structure, no kernels.  This is the ground truth the
+other backends are tested against, and the cheapest executor for
+program compilation / costing runs where only the op stream matters.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import Backend, Capabilities
+from repro.core import calibration as cal
+from repro.kernels.bitserial.ref import bitserial_add_ref
+from repro.kernels.majx.ref import majx_ref
+from repro.kernels.mismatch.ref import mismatch_count_ref
+from repro.kernels.rowcopy.ref import fanout_ref
+
+
+class OracleBackend(Backend):
+    name = "oracle"
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            name=self.name,
+            description="pure bitwise reference (kernels/*/ref.py + "
+                        "core.bitplanes); exact, error-free",
+            stochastic=False,
+            device_model=False,
+            accelerated=False,
+            max_majx=1_000_000,  # any odd arity
+            n_act_levels=cal.N_ACT_LEVELS,
+            native_batch=False,
+        )
+
+    def majx(self, planes: jax.Array, x: Optional[int] = None,
+             n_act: Optional[int] = None) -> jax.Array:
+        return majx_ref(jnp.asarray(planes, jnp.uint32))
+
+    def rowcopy(self, src: jax.Array, n_dst: int) -> jax.Array:
+        return fanout_ref(jnp.asarray(src, jnp.uint32), n_dst)
+
+    def mismatch(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return mismatch_count_ref(jnp.asarray(a, jnp.uint32).reshape(-1),
+                                  jnp.asarray(b, jnp.uint32).reshape(-1))
+
+    def add_planes(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return bitserial_add_ref(a, b)

@@ -1,0 +1,65 @@
+"""``pallas``: the bulk TPU-kernel backend.
+
+Dispatches the Pallas kernels of :mod:`repro.kernels` (bit-sliced CSA
+MAJX, fan-out Multi-RowCopy, fused XOR+popcount mismatch, fused
+bit-serial adder) through the shared VPU tiling helper
+(:mod:`repro.kernels.tiling`).  ``ctx.interpret=True`` is the validated
+CPU path; on real TPUs construct the context with ``interpret=False``.
+Batch dispatch is vmapped over the kernel wrappers — one fused launch
+per batch, not a python loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import Backend, Capabilities
+from repro.core import calibration as cal
+from repro.kernels.bitserial.ops import bitserial_add
+from repro.kernels.majx.ops import majx as majx_kernel
+from repro.kernels.mismatch.ops import mismatch_count
+from repro.kernels.rowcopy.ops import fanout
+
+
+class PallasBackend(Backend):
+    name = "pallas"
+
+    def capabilities(self) -> Capabilities:
+        return Capabilities(
+            name=self.name,
+            description="bulk Pallas TPU kernels (CSA bit-sliced MAJX, "
+                        "fan-out MRC, fused mismatch, bit-serial add)",
+            stochastic=False,
+            device_model=False,
+            accelerated=True,
+            max_majx=1_000_000,
+            n_act_levels=cal.N_ACT_LEVELS,
+            native_batch=True,
+        )
+
+    def majx(self, planes: jax.Array, x: Optional[int] = None,
+             n_act: Optional[int] = None) -> jax.Array:
+        return majx_kernel(planes, interpret=self.ctx.interpret,
+                           block_r=self.ctx.block_r,
+                           block_c=self.ctx.block_c)
+
+    def majx_batch(self, planes: jax.Array) -> jax.Array:
+        """(B, X, R, C) -> (B, R, C) in one vmapped kernel dispatch."""
+        fn = functools.partial(majx_kernel, interpret=self.ctx.interpret,
+                               block_r=self.ctx.block_r,
+                               block_c=self.ctx.block_c)
+        return jax.vmap(fn)(jnp.asarray(planes, jnp.uint32))
+
+    def rowcopy(self, src: jax.Array, n_dst: int) -> jax.Array:
+        return fanout(src, n_dst, interpret=self.ctx.interpret,
+                      block_r=self.ctx.block_r, block_c=self.ctx.block_c)
+
+    def mismatch(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return mismatch_count(a, b, interpret=self.ctx.interpret)
+
+    def add_planes(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        return bitserial_add(a, b, interpret=self.ctx.interpret)

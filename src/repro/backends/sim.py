@@ -1,0 +1,159 @@
+"""``sim``: the behavioural device-model backend.
+
+Executes every op through :class:`repro.core.subarray.Subarray` command
+sequences — the same APA/PRE/ACT streams the paper issues — with the
+calibrated :class:`~repro.core.errormodel.ErrorModel` injecting
+deterministic per-cell errors (``ctx.ideal=True`` disables injection for
+pure-semantics runs).  Bulk (R, C) tiles are spread round-robin over a
+pool of subarrays so row-images land on independent row groups, exactly
+like the paper's per-subarray characterization.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import Backend, Capabilities
+from repro.backends.context import ExecutionContext
+from repro.core import calibration as cal
+from repro.core import majx as mj
+from repro.core import rowcopy as rc
+from repro.core.subarray import DeviceProfile, Subarray
+from repro.kernels.mismatch.ref import mismatch_count_ref
+
+_PROFILES = {"H": DeviceProfile.mfr_h, "M": DeviceProfile.mfr_m,
+             "S": DeviceProfile.mfr_s}
+
+#: Subarrays per plane width: row-images of a bulk tile rotate over these
+#: (independent stable-cell masks, like testing several random subarrays).
+_POOL_SIZE = 4
+
+
+class SimBackend(Backend):
+    name = "sim"
+
+    def __init__(self, ctx: Optional[ExecutionContext] = None):
+        super().__init__(ctx)
+        self._pools: dict[int, list[Subarray]] = {}
+        self._rr = 0  # round-robin cursor over the pool
+
+    def capabilities(self) -> Capabilities:
+        anchor = cal.DEVICE_ANCHORS[self.ctx.mfr]
+        return Capabilities(
+            name=self.name,
+            description="behavioural Subarray command model with the "
+                        "calibrated per-cell error surfaces",
+            stochastic=not self.ctx.ideal,
+            device_model=True,
+            accelerated=False,
+            max_majx=anchor.max_majx if not self.ctx.ideal else 9,
+            n_act_levels=cal.N_ACT_LEVELS,
+            native_batch=False,
+        )
+
+    # ------------------------------------------------------------ plumbing
+    def _subarray(self, n_words: int) -> Subarray:
+        pool = self._pools.get(n_words)
+        if pool is None:
+            profile = _PROFILES[self.ctx.mfr]()
+            pool = [
+                Subarray(profile, cols=n_words * 32, temp_c=self.ctx.temp_c,
+                         vpp_v=self.ctx.vpp_v, ideal=self.ctx.ideal,
+                         seed=self.ctx.seed * 1009 + i)
+                for i in range(_POOL_SIZE)
+            ]
+            self._pools[n_words] = pool
+        sa = pool[self._rr % len(pool)]
+        self._rr += 1
+        return sa
+
+    @staticmethod
+    def _per_row(fn, plane: jax.Array) -> jax.Array:
+        """Apply a (words,)->(...) op to a (words,) or (R, C) row set."""
+        plane = jnp.asarray(plane, jnp.uint32)
+        if plane.ndim == 1:
+            return fn(plane)
+        return jnp.stack([fn(row) for row in plane])
+
+    # ------------------------------------------------------------- bulk ops
+    def majx(self, planes: jax.Array, x: Optional[int] = None,
+             n_act: Optional[int] = None) -> jax.Array:
+        planes = jnp.asarray(planes, jnp.uint32)
+        x = x or planes.shape[0]
+        n = n_act or max(self.ctx.n_act, cal.min_activation_for(x))
+        if n < x:
+            n = cal.min_activation_for(x)
+        t = self.ctx.timings
+
+        def one(stack: jax.Array) -> jax.Array:  # (X, words)
+            sa = self._subarray(stack.shape[-1])
+            return mj.majx(sa, list(stack), n, t1_ns=t.majx_t1,
+                           t2_ns=t.majx_t2, pattern=self.ctx.pattern)
+
+        if planes.ndim == 2:
+            return one(planes)
+        # (X, R, C): each r is an independent row image.
+        return jnp.stack([one(planes[:, r, :])
+                          for r in range(planes.shape[1])])
+
+    def rowcopy(self, src: jax.Array, n_dst: int) -> jax.Array:
+        t = self.ctx.timings
+
+        def one(row: jax.Array) -> jax.Array:  # (words,) -> (n_dst, words)
+            sa = self._subarray(row.shape[-1])
+            out, base = [], 0
+            while len(out) < n_dst:
+                remaining = n_dst - len(out)
+                n_act = max(l for l in cal.N_ACT_LEVELS
+                            if l <= remaining + 1)
+                _, dests = rc.multi_rowcopy(sa, row, n_act, t1_ns=t.mrc_t1,
+                                            t2_ns=t.mrc_t2, base_row=base)
+                out.extend(sa.read_row(d) for d in dests[:remaining])
+                base += n_act
+            return jnp.stack(out)
+
+        src = jnp.asarray(src, jnp.uint32)
+        if src.ndim == 1:
+            return one(src)
+        # (R, C) -> (n_dst, R, C)
+        per_row = [one(row) for row in src]          # R x (n_dst, C)
+        return jnp.stack(per_row, axis=1)
+
+    def mismatch(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        # Success-rate measurement happens off-device in the paper's
+        # harness (read-back + host compare); the digital count is exact.
+        return mismatch_count_ref(jnp.asarray(a, jnp.uint32).reshape(-1),
+                                  jnp.asarray(b, jnp.uint32).reshape(-1))
+
+    def add_planes(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        from repro.pud.arith import BitSerial
+
+        bs = BitSerial(tier=self.ctx.tier, n_act=self.ctx.n_act,
+                       executor=self)
+        out, _ = bs.add(jnp.asarray(a, jnp.uint32),
+                        jnp.asarray(b, jnp.uint32))
+        return out
+
+    # ------------------------------------------------- device-model hooks
+    def _copy(self, plane: jax.Array) -> jax.Array:
+        def one(row: jax.Array) -> jax.Array:
+            sa = self._subarray(row.shape[-1])
+            sa.write_row(0, row)
+            rc.rowclone(sa, 0, 1)
+            return sa.read_row(1)
+
+        return self._per_row(one, plane)
+
+    def _not(self, plane: jax.Array) -> jax.Array:
+        # NOT is a complement-row copy (Ambit-style): clone the staged
+        # complement so the op pays RowClone error semantics.
+        def one(row: jax.Array) -> jax.Array:
+            sa = self._subarray(row.shape[-1])
+            sa.write_row(0, ~jnp.asarray(row, jnp.uint32))
+            rc.rowclone(sa, 0, 1)
+            return sa.read_row(1)
+
+        return self._per_row(one, plane)

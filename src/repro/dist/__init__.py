@@ -1,0 +1,6 @@
+"""Distributed-execution utilities: logical-axis sharding rules."""
+
+from repro.dist.sharding import (  # noqa: F401
+    AxisRules, DEFAULT_RULES, SERVE_RULES, axis_extent, constraint,
+    sharding_for, tree_shardings, use_rules,
+)

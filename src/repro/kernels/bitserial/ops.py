@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitplanes as bp
+from repro.kernels import tiling
 from repro.kernels.bitserial.kernel import bitserial_add_pallas
 from repro.kernels.bitserial.ref import bitserial_add_ref
 
@@ -19,13 +20,11 @@ def bitserial_add(a_planes: jax.Array, b_planes: jax.Array, *,
     squeeze = a.ndim == 2
     if squeeze:
         a, b = a[:, None, :], b[:, None, :]
-    nbits, r, c = a.shape
-    pr, pc = (-r) % block_r, (-c) % block_c
-    if pr or pc:
-        pad = ((0, 0), (0, pr), (0, pc))
-        a, b = jnp.pad(a, pad), jnp.pad(b, pad)
-    out = bitserial_add_pallas(a, b, block_r=block_r, block_c=block_c,
-                               interpret=interpret)[:, :r, :c]
+    a, rc = tiling.pad_to_tile(a, block_r, block_c)
+    b, _ = tiling.pad_to_tile(b, block_r, block_c)
+    out = tiling.crop(
+        bitserial_add_pallas(a, b, block_r=block_r, block_c=block_c,
+                             interpret=interpret), rc)
     return out[:, 0, :] if squeeze else out
 
 

@@ -6,19 +6,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitplanes as bp
+from repro.kernels import tiling
 from repro.kernels.majx.kernel import majx_pallas
 from repro.kernels.majx.ref import majx_ref
-
-_VPU_R, _VPU_C = 8, 128
-
-
-def _pad_to(x: jax.Array, r_mult: int, c_mult: int) -> tuple[jax.Array, int, int]:
-    n, r, c = x.shape
-    pr = (-r) % r_mult
-    pc = (-c) % c_mult
-    if pr or pc:
-        x = jnp.pad(x, ((0, 0), (0, pr), (0, pc)))
-    return x, r, c
 
 
 def majx(planes: jax.Array, *, interpret: bool = True,
@@ -34,10 +24,10 @@ def majx(planes: jax.Array, *, interpret: bool = True,
         squeeze = True
     else:
         squeeze = False
-    block_c = max(_VPU_C, min(block_c, 4096))
-    padded, r, c = _pad_to(planes, block_r, block_c)
-    out = majx_pallas(padded, block_r=block_r, block_c=block_c,
-                      interpret=interpret)[:r, :c]
+    block_c = tiling.clamp_block_c(block_c)
+    padded, rc = tiling.pad_to_tile(planes, block_r, block_c)
+    out = tiling.crop(majx_pallas(padded, block_r=block_r, block_c=block_c,
+                                  interpret=interpret), rc)
     return out[0] if squeeze else out
 
 
@@ -48,17 +38,14 @@ def vote(replicas, *, interpret: bool = True):
     MAJX kernel, and bitcasts back (see repro.pud.tmr for the digital
     oracle used in tests).
     """
-    words, shape, dtype = None, None, None
+    shape, dtype = None, None
     stacked = []
     for rep in replicas:
         w, shape, dtype = bp.bitcast_to_planes(rep)
         stacked.append(w)
     words = jnp.stack(stacked)  # (X, n_words)
-    n = words.shape[0]
     c = words.shape[1]
-    rows = -(-c // 4096)
-    pad = rows * 4096 - c
-    planes = jnp.pad(words, ((0, 0), (0, pad))).reshape(n, rows, 4096)
+    planes = tiling.words_to_rows(words, tiling.MAX_BLOCK_C)
     voted = majx(planes, interpret=interpret).reshape(-1)[:c]
     return bp.bitcast_from_planes(voted, shape, dtype)
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tiling
 from repro.kernels.mismatch.kernel import mismatch_pallas
 from repro.kernels.mismatch.ref import mismatch_count_ref
 
@@ -14,12 +15,9 @@ def mismatch_count(got: jax.Array, want: jax.Array, *,
     """Number of differing bits between packed arrays of any shape."""
     g = jnp.asarray(got, jnp.uint32).reshape(-1)
     w = jnp.asarray(want, jnp.uint32).reshape(-1)
-    c = g.shape[0]
     width = 512
-    rows = -(-c // width)
-    pad = rows * width - c
-    g2 = jnp.pad(g, (0, pad)).reshape(rows, width)
-    w2 = jnp.pad(w, (0, pad)).reshape(rows, width)
+    g2 = tiling.words_to_rows(g, width)
+    w2 = tiling.words_to_rows(w, width)
     return mismatch_pallas(g2, w2, interpret=interpret)
 
 

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tiling
 from repro.kernels.rowcopy.kernel import fanout_pallas
 from repro.kernels.rowcopy.ref import fanout_ref
 
@@ -16,12 +17,10 @@ def fanout(src: jax.Array, fanout_n: int, *, interpret: bool = True,
     squeeze = src.ndim == 1
     if squeeze:
         src = src[None, :]
-    r, c = src.shape
-    pr, pc = (-r) % block_r, (-c) % block_c
-    if pr or pc:
-        src = jnp.pad(src, ((0, pr), (0, pc)))
-    out = fanout_pallas(src, fanout=fanout_n, block_r=block_r,
-                        block_c=block_c, interpret=interpret)[:, :r, :c]
+    padded, rc = tiling.pad_to_tile(src, block_r, block_c)
+    out = tiling.crop(
+        fanout_pallas(padded, fanout=fanout_n, block_r=block_r,
+                      block_c=block_c, interpret=interpret), rc)
     return out[:, 0, :] if squeeze else out
 
 

@@ -1,0 +1,63 @@
+"""Shared VPU tile-alignment helpers for the bulk-bitwise Pallas kernels.
+
+Every kernel wrapper in ``repro.kernels`` stages packed uint32 planes
+through VMEM in (BR, BC) blocks that must be multiples of the TPU VPU
+tile (8 sublanes x 128 lanes).  The padding/cropping arithmetic used to
+be copy-pasted per wrapper; it lives here once and is what the
+``pallas`` execution backend (:mod:`repro.backends.pallas`) dispatches
+through.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: TPU VPU tile geometry: 8 sublanes x 128 lanes.
+VPU_SUBLANES = 8
+VPU_LANES = 128
+
+#: Widest column block any wrapper uses (bounds VMEM per grid step).
+MAX_BLOCK_C = 4096
+
+
+def clamp_block_c(block_c: int, hi: int = MAX_BLOCK_C) -> int:
+    """Clamp a requested column block to [VPU_LANES, hi]."""
+    return max(VPU_LANES, min(block_c, hi))
+
+
+def pad_to_tile(x: jax.Array, block_r: int, block_c: int
+                ) -> tuple[jax.Array, tuple[int, int]]:
+    """Pad the trailing (R, C) dims up to multiples of (block_r, block_c).
+
+    Accepts any number of leading dims.  Returns ``(padded, (r, c))``
+    where (r, c) are the original trailing sizes, for cropping the
+    kernel output back with :func:`crop`.
+    """
+    *lead, r, c = x.shape
+    pr = (-r) % block_r
+    pc = (-c) % block_c
+    if pr or pc:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pr), (0, pc)])
+    return x, (r, c)
+
+
+def crop(x: jax.Array, rc: tuple[int, int]) -> jax.Array:
+    """Crop the trailing (R, C) dims back to the pre-padding sizes."""
+    r, c = rc
+    return x[..., :r, :c]
+
+
+def words_to_rows(words: jax.Array, width: int) -> jax.Array:
+    """Reshape flat word vectors (..., W) into a (..., rows, width) tile.
+
+    Pads the trailing dim with zero words so W fits ``rows * width`` —
+    the standard lowering of a 1-D packed plane onto the 2-D VPU grid.
+    """
+    w = words.shape[-1]
+    rows = -(-w // width)
+    pad = rows * width - w
+    if pad:
+        words = jnp.pad(words,
+                        [(0, 0)] * (words.ndim - 1) + [(0, pad)])
+    return words.reshape(*words.shape[:-1], rows, width)

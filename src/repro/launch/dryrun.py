@@ -38,6 +38,14 @@ from repro.models import model as M
 from repro.train.step import make_train_step
 
 
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() returns a 1-elem list on older jax."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _train_fn(cfg, microbatches: int = 1):
     tc = TrainConfig(microbatches=microbatches, compression="none")
     return make_train_step(cfg, tc)
@@ -116,20 +124,20 @@ def _cost_points(cfg, shape, mesh):
             for s_small in (64, 128):
                 sh = dataclasses.replace(shape, seq_len=s_small)
                 _, comp = lower_cell(cfg, sh, mesh, donate=False)
-                ca = comp.cost_analysis()
+                ca = _cost_analysis(comp)
                 pts[s_small] = rl.CostPoint(ca.get("flops", 0.0),
                                             ca.get("bytes accessed", 0.0))
             if shape.kind == "decode":
                 # decode for ssm is python-unrolled: exact, no composition
                 _, comp = lower_cell(cfg, shape, mesh, donate=False)
-                ca = comp.cost_analysis()
+                ca = _cost_analysis(comp)
                 return rl.CostPoint(ca.get("flops", 0.0),
                                     ca.get("bytes accessed", 0.0))
             return rl.compose_seq(shape.seq_len, pts)
         for d in depths:
             cfg_d = dataclasses.replace(cfg, n_layers=d, remat="none")
             _, comp = lower_cell(cfg_d, shape, mesh, donate=False)
-            ca = comp.cost_analysis()
+            ca = _cost_analysis(comp)
             points[d] = rl.CostPoint(ca.get("flops", 0.0),
                                      ca.get("bytes accessed", 0.0))
         return rl.compose(cfg, points)
@@ -158,7 +166,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     hlo = compiled.as_text()
     trips = [max(cfg.n_layers, 1)] if mb == 1 else [mb, max(cfg.n_layers, 1)]
     coll = rl.collective_bytes(hlo, loop_trips=trips)
-    ca = compiled.cost_analysis()
+    ca = _cost_analysis(compiled)
     deploy_cost = rl.CostPoint(ca.get("flops", 0.0),
                                ca.get("bytes accessed", 0.0))
 

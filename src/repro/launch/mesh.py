@@ -15,16 +15,22 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    # axis_types landed after jax 0.4.37; Auto is the default there anyway.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(n_devices: int | None = None, model: int = 2):

@@ -27,7 +27,7 @@ unlock the wider gates demonstrated by the paper.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,23 @@ from repro.core import bitplanes as bp
 from repro.pud.isa import Program
 
 Plane = jax.Array  # uint32[W]
+
+
+class GateExecutor(Protocol):
+    """How a recorded gate actually computes its result.
+
+    The bit-serial compiler below emits the *same* Program regardless of
+    the executor; backends (repro.backends) inject themselves here so one
+    compiled §8.1 program runs through the logical oracle, the
+    behavioural subarray simulator, or the Pallas TPU kernels
+    interchangeably.
+    """
+
+    def gate_maj(self, planes: Sequence[Plane], x: int, n_act: int) -> Plane:
+        ...
+
+    def gate_not(self, p: Plane) -> Plane:
+        ...
 
 
 def _maj_planes(planes: Sequence[Plane]) -> Plane:
@@ -52,6 +69,8 @@ class BitSerial:
     tier: int = 3          # largest MAJ arity available (3/5/7/9)
     n_act: int = 4         # simultaneous activation count per MAJ issue
     program: Program = dataclasses.field(default_factory=Program)
+    #: Optional gate executor (see :class:`GateExecutor`); None = logical.
+    executor: Optional[GateExecutor] = None
 
     def __post_init__(self):
         if self.tier not in (3, 5, 7, 9):
@@ -69,10 +88,14 @@ class BitSerial:
 
         n_act = cal.min_activation_for(max(self.n_act, x))
         self.program.emit("MAJ", x=x, n_act=n_act, tag=tag)
+        if self.executor is not None:
+            return self.executor.gate_maj(planes, x, n_act)
         return _maj_planes(planes)
 
     def not_(self, p: Plane, tag: str = "") -> Plane:
         self.program.emit("NOT", tag=tag)
+        if self.executor is not None:
+            return self.executor.gate_not(p)
         return ~jnp.asarray(p, jnp.uint32)
 
     def const(self, value: int, like: Plane) -> Plane:
@@ -237,19 +260,22 @@ class BitSerial:
 # ---------------------------------------------------------------------------
 
 
-def run_elementwise(op: str, a, b, tier: int = 3, n_act: int = 4
+def run_elementwise(op: str, a, b, tier: int = 3, n_act: int = 4,
+                    executor: Optional[GateExecutor] = None,
                     ) -> tuple[jax.Array, Program]:
     """Run a §8.1 microbenchmark op over uint32 element vectors.
 
     Returns (uint32 results, recorded Program).  ``a``/``b`` may be any
-    shape; they are flattened into bit-serial lanes.
+    shape; they are flattened into bit-serial lanes.  ``executor``
+    selects where each recorded gate computes (default: logical oracle);
+    see :class:`GateExecutor` / :mod:`repro.backends`.
     """
     a = jnp.asarray(a, jnp.uint32).reshape(-1)
     b = jnp.asarray(b, jnp.uint32).reshape(-1)
     k = a.shape[0]
     A = bp.pack_uint_elements(a)
     B = bp.pack_uint_elements(b)
-    ctx = BitSerial(tier=tier, n_act=n_act)
+    ctx = BitSerial(tier=tier, n_act=n_act, executor=executor)
     if op == "and":
         out = jnp.stack([ctx.and_(A[i], B[i]) for i in range(A.shape[0])])
     elif op == "or":

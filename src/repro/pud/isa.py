@@ -24,17 +24,33 @@ class PUDOp:
     x: int = 0         # majority arity (MAJ only)
     n_act: int = 0     # simultaneous activation count (MAJ/MRC)
     tag: str = ""      # provenance (e.g. "add/carry[7]")
+    #: Row addresses, making the stream *executable* by any registered
+    #: backend (repro.backends): MAJ reads the X distinct operand rows in
+    #: ``srcs`` and writes ``dsts``; COPY/NOT/MRC read ``srcs[0]`` and
+    #: write every row in ``dsts``; FRAC neutral-inits ``dsts``.  Programs
+    #: recorded purely for costing leave both empty.
+    srcs: tuple[int, ...] = ()
+    dsts: tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
 class Program:
     ops: list[PUDOp] = dataclasses.field(default_factory=list)
 
-    def emit(self, kind: str, x: int = 0, n_act: int = 0, tag: str = "") -> None:
-        self.ops.append(PUDOp(kind, x, n_act, tag))
+    def emit(self, kind: str, x: int = 0, n_act: int = 0, tag: str = "",
+             srcs: tuple[int, ...] = (), dsts: tuple[int, ...] = ()) -> None:
+        self.ops.append(PUDOp(kind, x, n_act, tag, tuple(srcs), tuple(dsts)))
 
     def extend(self, other: "Program") -> None:
         self.ops.extend(other.ops)
+
+    def n_rows(self) -> int:
+        """Rows an executing backend must hold (max address + 1)."""
+        mx = -1
+        for op in self.ops:
+            for r in op.srcs + op.dsts:
+                mx = max(mx, r)
+        return mx + 1
 
     def histogram(self) -> dict[tuple, int]:
         h: dict[tuple, int] = collections.Counter()

@@ -5,9 +5,15 @@ Whether offloading such an op from the TPU to a PUD-capable memory pays off
 depends on (a) the TPU roofline cost of the op (pure bandwidth for bitwise
 work) vs (b) the PUD command-schedule latency including success-rate-driven
 retries, and (c) the saved HBM traffic.  This planner prices both sides and
-is used by the serving engine to decide where integrity votes and bulk
-bitmap ops run.  On TPU-only deployments it degrades to always-TPU (and the
-framework's Pallas `vote` kernel runs the op), so the decision is advisory.
+is used by the serving engine's PUD hooks to decide where integrity votes
+and bulk bitmap ops run.  On TPU-only deployments it degrades to
+always-TPU (and the ``pallas`` backend runs the op), so the decision is
+advisory.
+
+Planning is keyed by the shared
+:class:`~repro.backends.context.ExecutionContext`: the calibration point
+(manufacturer, temperature, VPP) that fixes the retry counts comes from
+the same object the execution backends run under.
 
 TPU-side constants match the roofline setup in launch/roofline.py
 (TPU v5e-like: 197 TFLOP/s bf16, 819 GB/s HBM).
@@ -16,7 +22,9 @@ TPU-side constants match the roofline setup in launch/roofline.py
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
+from repro.backends.context import ExecutionContext
 from repro.core import calibration as cal
 from repro.core.errormodel import ErrorModel, expected_retries
 from repro.pud import latency as lat
@@ -39,6 +47,15 @@ class OffloadDecision:
         return self.tpu_ns / self.pud_ns
 
 
+def _resolve(ctx: Optional[ExecutionContext],
+             errors: Optional[ErrorModel]) -> tuple[ExecutionContext,
+                                                    ErrorModel]:
+    """One calibration point for both sides of the plan."""
+    if ctx is None:
+        ctx = ExecutionContext(mfr=errors.mfr if errors else "H")
+    return ctx, errors if errors is not None else ctx.error_model
+
+
 def tpu_bitwise_ns(n_bytes: int, n_operands: int = 2) -> float:
     """Bandwidth-bound cost of a bulk bitwise op on the TPU (read all
     operands + write result; bitwise VPU throughput never binds)."""
@@ -46,33 +63,41 @@ def tpu_bitwise_ns(n_bytes: int, n_operands: int = 2) -> float:
     return traffic / HBM_BYTES_PER_S * 1e9
 
 
-def pud_majx_ns(n_bytes: int, x: int, n_act: int, errors: ErrorModel,
-                subarrays: int = 48, best_group: bool = True) -> float:
+def pud_majx_ns(n_bytes: int, x: int, n_act: int,
+                errors: Optional[ErrorModel] = None, subarrays: int = 48,
+                best_group: bool = True,
+                ctx: Optional[ExecutionContext] = None) -> float:
     """PUD cost: ceil(bits/row_bits) MAJX issues spread over subarrays."""
+    ctx, errors = _resolve(ctx, errors)
     if best_group:
         s = cal.MAJX_BEST_GROUP_SUCCESS[errors.mfr].get(x, 0.005)
     else:
-        s = errors.majx_success(x, n_act)
+        s = errors.majx_success(x, n_act, t1=ctx.timings.majx_t1,
+                                t2=ctx.timings.majx_t2, **ctx.env())
     issues = -(-(n_bytes * 8) // lat.ROW_BITS)
     per = lat.LAT.majx_apa * expected_retries(s)
     waves = -(-issues // subarrays)
     return waves * per
 
 
-def pud_mrc_ns(n_bytes: int, fanout: int, errors: ErrorModel,
-               subarrays: int = 48) -> float:
-    s = errors.mrc_success(fanout)
+def pud_mrc_ns(n_bytes: int, fanout: int,
+               errors: Optional[ErrorModel] = None, subarrays: int = 48,
+               ctx: Optional[ExecutionContext] = None) -> float:
+    ctx, errors = _resolve(ctx, errors)
+    s = errors.mrc_success(fanout, t1=ctx.timings.mrc_t1,
+                           t2=ctx.timings.mrc_t2, **ctx.env())
     rows = -(-(n_bytes * 8) // lat.ROW_BITS)
     waves = -(-rows // subarrays)
     return waves * lat.LAT.mrc * expected_retries(s)
 
 
 def plan_vote(n_bytes: int, x: int = 3, errors: ErrorModel | None = None,
-              subarrays: int = 48) -> OffloadDecision:
+              subarrays: int = 48,
+              ctx: Optional[ExecutionContext] = None) -> OffloadDecision:
     """Where should an X-replica majority vote over ``n_bytes`` run?"""
-    errors = errors or ErrorModel("H")
+    ctx, errors = _resolve(ctx, errors)
     tpu = tpu_bitwise_ns(n_bytes, n_operands=x)
-    pud = pud_majx_ns(n_bytes, x, 32, errors, subarrays)
+    pud = pud_majx_ns(n_bytes, x, 32, errors, subarrays, ctx=ctx)
     winner = "pud" if pud < tpu else "tpu"
     return OffloadDecision(
         op=f"maj{x}_vote", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,
@@ -84,11 +109,13 @@ def plan_vote(n_bytes: int, x: int = 3, errors: ErrorModel | None = None,
 
 def plan_broadcast(n_bytes: int, fanout: int,
                    errors: ErrorModel | None = None,
-                   subarrays: int = 48) -> OffloadDecision:
+                   subarrays: int = 48,
+                   ctx: Optional[ExecutionContext] = None) -> OffloadDecision:
     """One-to-``fanout`` replication: HBM copies vs Multi-RowCopy."""
-    errors = errors or ErrorModel("H")
+    ctx, errors = _resolve(ctx, errors)
     tpu = n_bytes * (1 + fanout) / HBM_BYTES_PER_S * 1e9
-    pud = pud_mrc_ns(n_bytes * fanout, min(fanout, 31), errors, subarrays)
+    pud = pud_mrc_ns(n_bytes * fanout, min(fanout, 31), errors, subarrays,
+                     ctx=ctx)
     winner = "pud" if pud < tpu else "tpu"
     return OffloadDecision(
         op=f"broadcast_x{fanout}", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,

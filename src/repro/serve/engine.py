@@ -4,18 +4,26 @@ A fixed-width decode batch of ``slots``; finished sequences free their slot
 and queued requests are prefilled into it (continuous batching a la Orca /
 vLLM).  Greedy or temperature sampling.  All model math lives in
 repro.models.model; the engine is pure scheduling.
+
+PUD hooks: the engine can carry a PUD execution backend (one-string
+choice from :mod:`repro.backends`) for in-memory integrity work — a
+majority vote healing silent corruption across parameter replicas before
+they serve traffic, with the offload planner recording where the vote
+*would* run on PUD-capable memory (advisory on TPU-only deployments).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import ExecutionContext, get_backend
 from repro.configs.base import ModelConfig
+from repro.core import bitplanes as bp
 from repro.models import model as M
 
 
@@ -33,17 +41,66 @@ class Engine:
     """Single-slot-group engine (one jitted decode fn, batch = n slots)."""
 
     def __init__(self, params, cfg: ModelConfig, max_seq: int = 256,
-                 greedy: bool = True, seed: int = 0):
+                 greedy: bool = True, seed: int = 0,
+                 pud_backend: str = "pallas",
+                 pud_ctx: Optional[ExecutionContext] = None):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
+        # Integrity votes must be error-free: default to an ideal context
+        # so a stochastic backend ("sim") can't corrupt params it claims
+        # to heal.  Pass a non-ideal pud_ctx explicitly only for fidelity
+        # studies, never for a serving deployment.
+        self.pud = get_backend(pud_backend,
+                               pud_ctx or ExecutionContext(ideal=True))
+        self.pud_decisions: list = []
         self._decode = jax.jit(
             lambda p, t, c: M.decode(p, t, c, cfg))
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, b, cfg, max_seq))
 
+    # ------------------------------------------------------------ PUD hooks
+    def heal_params(self, replicas: Sequence) -> int:
+        """Majority-vote parameter replicas through the PUD backend.
+
+        ``replicas``: >= 3 (odd) pytrees with the engine's param structure.
+        Installs the healed params and returns the number of corrected
+        bits.  The offload planner's verdict for each vote is appended to
+        ``self.pud_decisions`` (advisory: where the vote would run on
+        PUD-capable memory).
+        """
+        from repro.pud.offload import plan_vote
+
+        x = len(replicas)
+        flats = [jax.tree.leaves(r) for r in replicas]
+        treedef = jax.tree.structure(replicas[0])
+        healed_leaves, fixed_bits = [], 0
+        for leaf_reps in zip(*flats):
+            words = [bp.bitcast_to_planes(r) for r in leaf_reps]
+            stacked = jnp.stack([w for w, _, _ in words])
+            voted = self.pud.majx(stacked, x=x)
+            _, shape, dtype = words[0]
+            fixed_bits += int(self.pud.mismatch(stacked[0], voted))
+            healed_leaves.append(bp.bitcast_from_planes(voted, shape, dtype))
+            self.pud_decisions.append(
+                plan_vote(int(stacked[0].size) * 4, x=x, ctx=self.pud.ctx))
+        self.params = jax.tree.unflatten(treedef, healed_leaves)
+        return fixed_bits
+
+    def verify_params(self, reference) -> float:
+        """Bit-level success rate of live params vs a reference pytree."""
+        total_bits = bad = 0
+        for a, b in zip(jax.tree.leaves(self.params),
+                        jax.tree.leaves(reference)):
+            wa, _, _ = bp.bitcast_to_planes(a)
+            wb, _, _ = bp.bitcast_to_planes(b)
+            bad += int(self.pud.mismatch(wa, wb))
+            total_bits += int(wa.size) * 32
+        return 1.0 - bad / max(total_bits, 1)
+
+    # ------------------------------------------------------------ serving
     def _sample(self, logits) -> np.ndarray:
         lg = np.asarray(logits.astype(jnp.float32))
         if self.cfg.family == "audio":
