@@ -3,6 +3,14 @@
 Each function returns a list of CSV rows (name, us_per_call, derived)
 where ``derived`` carries the figure's headline quantity.  benchmarks/run.py
 prints them; EXPERIMENTS.md §Paper-validation quotes them.
+
+The characterization figures (3, 4, 6-12) are formatted views over
+`repro.sweep` records: each figure's grid is a preset
+:class:`~repro.sweep.spec.SweepSpec` (``repro.sweep.presets``) whose
+records are produced — or loaded from the resumable store under
+``results/sweeps`` — by the sweep engine.  The remaining figures
+(power, SPICE, §8 case studies) are analytic models, not
+characterization grids, and stay direct.
 """
 
 from __future__ import annotations
@@ -20,6 +28,15 @@ from repro.core import power as pw
 from repro.core.errormodel import ErrorModel
 from repro.pud import latency as lat
 from repro.pud.secure_erase import destruction_time_ns, speedup_over_rowclone
+from repro.sweep import default_root, presets, records_for
+
+#: Sweep record stores for the figure grids (resumable across runs;
+#: repo-relative default shared with the CLI and make_tables).
+SWEEP_ROOT = default_root()
+
+
+def _records(spec):
+    return records_for(spec, root=SWEEP_ROOT, progress=False)
 
 
 def _timeit(fn, reps=3):
@@ -34,29 +51,23 @@ def _timeit(fn, reps=3):
 
 
 def fig3_simra_timing():
-    em = ErrorModel("H")
-    rows = []
-    for t1 in (1.5, 3.0):
-        for t2 in (1.5, 3.0):
-            for n in cal.N_ACT_LEVELS:
-                s = em.simra_success(n, t1=t1, t2=t2)
-                rows.append((f"fig3_simra_n{n}_t1_{t1}_t2_{t2}", 0.0,
-                             f"success={s:.4f}"))
-    return rows
+    recs = sorted(_records(presets.fig3_spec()),
+                  key=lambda r: (r["t1"], r["t2"], r["n_act"]))
+    return [(f"fig3_simra_n{r['n_act']}_t1_{r['t1']}_t2_{r['t2']}", 0.0,
+             f"success={r['success']:.4f}") for r in recs]
 
 
 # Fig 4: SiMRA temperature / voltage -------------------------------------
 
 
 def fig4_simra_temp_vpp():
-    em = ErrorModel("H")
-    rows = []
-    for t in cal.TEMPERATURES_C:
-        s = em.simra_success(32, temp_c=t)
-        rows.append((f"fig4a_simra32_T{t:.0f}", 0.0, f"success={s:.4f}"))
-    for v in cal.VPP_LEVELS_V:
-        s = em.simra_success(32, vpp_v=v)
-        rows.append((f"fig4b_simra32_V{v:.1f}", 0.0, f"success={s:.4f}"))
+    recs = _records(presets.fig4_spec())
+    rows = [(f"fig4a_simra32_T{r['temp_c']:.0f}", 0.0,
+             f"success={r['success']:.4f}")
+            for r in recs if r["vpp_v"] == 2.5]
+    rows += [(f"fig4b_simra32_V{r['vpp_v']:.1f}", 0.0,
+              f"success={r['success']:.4f}")
+             for r in recs if r["temp_c"] == 50.0]
     return rows
 
 
@@ -76,88 +87,68 @@ def fig5_power():
 
 
 def fig6_maj3_timing():
-    em = ErrorModel("H")
-    rows = []
-    for t1, t2 in ((1.5, 3.0), (3.0, 3.0), (4.5, 3.0), (1.5, 1.5)):
-        for n in (4, 8, 16, 32):
-            s = em.majx_success(3, n, t1=t1, t2=t2)
-            rows.append((f"fig6_maj3_n{n}_t1_{t1}_t2_{t2}", 0.0,
-                         f"success={s:.4f}"))
-    return rows
+    spec = presets.fig6_spec()
+    order = {t: i for i, t in enumerate(spec.timings)}
+    recs = sorted(_records(spec),
+                  key=lambda r: (order[(r["t1"], r["t2"])], r["n_act"]))
+    return [(f"fig6_maj3_n{r['n_act']}_t1_{r['t1']}_t2_{r['t2']}", 0.0,
+             f"success={r['success']:.4f}") for r in recs]
 
 
 # Fig 7: MAJX x data pattern ----------------------------------------------
 
 
 def fig7_majx_patterns():
-    em = ErrorModel("H")
-    rows = []
-    for x in (3, 5, 7, 9):
-        for pat in cal.DATA_PATTERNS:
-            s = em.majx_success(x, 32, pattern=pat)
-            rows.append((f"fig7_maj{x}_{pat.replace('/', '_')}", 0.0,
-                         f"success={s:.4f}"))
-    return rows
+    return [(f"fig7_maj{r['x']}_{r['pattern'].replace('/', '_')}", 0.0,
+             f"success={r['success']:.4f}")
+            for r in _records(presets.fig7_spec())]
 
 
 # Fig 8/9: MAJX temperature / voltage -------------------------------------
 
 
 def fig8_majx_temperature():
-    em = ErrorModel("H")
-    rows = []
-    for x in (3, 5, 7, 9):
-        for t in cal.TEMPERATURES_C:
-            for n in (cal.min_activation_for(x), 32):
-                s = em.majx_success(x, n, temp_c=t)
-                rows.append((f"fig8_maj{x}_n{n}_T{t:.0f}", 0.0,
-                             f"success={s:.4f}"))
-    return rows
+    recs = _records(presets.fig8_spec())
+    wanted = {(x, n) for x in (3, 5, 7, 9)
+              for n in (cal.min_activation_for(x), 32)}
+    recs = sorted((r for r in recs if (r["x"], r["n_act"]) in wanted),
+                  key=lambda r: (r["x"], r["temp_c"], r["n_act"]))
+    return [(f"fig8_maj{r['x']}_n{r['n_act']}_T{r['temp_c']:.0f}", 0.0,
+             f"success={r['success']:.4f}") for r in recs]
 
 
 def fig9_majx_voltage():
-    em = ErrorModel("H")
-    rows = []
-    for x in (3, 5, 7, 9):
-        for v in cal.VPP_LEVELS_V:
-            s = em.majx_success(x, 32, vpp_v=v)
-            rows.append((f"fig9_maj{x}_V{v:.1f}", 0.0, f"success={s:.4f}"))
-    return rows
+    return [(f"fig9_maj{r['x']}_V{r['vpp_v']:.1f}", 0.0,
+             f"success={r['success']:.4f}")
+            for r in _records(presets.fig9_spec())]
 
 
 # Fig 10-12: Multi-RowCopy -------------------------------------------------
 
 
 def fig10_mrc_timing():
-    em = ErrorModel("H")
-    rows = []
-    for t1 in (1.5, 3.0, 6.0, 9.0, 36.0):
-        for n_dest in (1, 3, 7, 15, 31):
-            s = em.mrc_success(n_dest, t1=t1)
-            rows.append((f"fig10_mrc{n_dest}_t1_{t1}", 0.0,
-                         f"success={s:.5f}"))
-    return rows
+    recs = sorted(_records(presets.fig10_spec()),
+                  key=lambda r: (r["t1"], r["n_dest"]))
+    return [(f"fig10_mrc{r['n_dest']}_t1_{r['t1']}", 0.0,
+             f"success={r['success']:.5f}") for r in recs]
 
 
 def fig11_mrc_patterns():
-    em = ErrorModel("H")
-    rows = []
-    for pat in ("0x00", "0xFF", "random"):
-        for n_dest in (1, 3, 7, 15, 31):
-            s = em.mrc_success(n_dest, pattern=pat)
-            rows.append((f"fig11_mrc{n_dest}_{pat}", 0.0, f"success={s:.5f}"))
-    return rows
+    order = {"0x00": 0, "0xFF": 1, "random": 2}
+    recs = sorted(_records(presets.fig11_spec()),
+                  key=lambda r: (order[r["pattern"]], r["n_dest"]))
+    return [(f"fig11_mrc{r['n_dest']}_{r['pattern']}", 0.0,
+             f"success={r['success']:.5f}") for r in recs]
 
 
 def fig12_mrc_temp_vpp():
-    em = ErrorModel("H")
-    rows = []
-    for t in cal.TEMPERATURES_C:
-        rows.append((f"fig12a_mrc31_T{t:.0f}", 0.0,
-                     f"success={em.mrc_success(31, temp_c=t):.5f}"))
-    for v in cal.VPP_LEVELS_V:
-        rows.append((f"fig12b_mrc31_V{v:.1f}", 0.0,
-                     f"success={em.mrc_success(31, vpp_v=v):.5f}"))
+    recs = _records(presets.fig12_spec())
+    rows = [(f"fig12a_mrc31_T{r['temp_c']:.0f}", 0.0,
+             f"success={r['success']:.5f}")
+            for r in recs if r["vpp_v"] == 2.5]
+    rows += [(f"fig12b_mrc31_V{r['vpp_v']:.1f}", 0.0,
+              f"success={r['success']:.5f}")
+             for r in recs if r["temp_c"] == 50.0]
     return rows
 
 

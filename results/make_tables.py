@@ -1,14 +1,63 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from results."""
+"""Generate the EXPERIMENTS.md tables from results artifacts.
+
+Sources: the dry-run/roofline JSONs under ``results/`` and the
+characterization record stores under ``results/sweeps/`` (written by
+``python -m repro.sweep.run``; see docs/SWEEPS.md).  The sweep section
+is reduced entirely through :mod:`repro.sweep.aggregate` — no per-point
+loops live here.
+"""
 import json
 import os
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "src"))
+
+SCAFFOLD = """# EXPERIMENTS
+
+## Characterization sweeps
+
+<!-- SWEEP_TABLE -->
+
+## Dry-run
+
+<!-- DRYRUN_TABLE -->
+
+## Roofline
+
+<!-- ROOFLINE_TABLE -->
+
+## Serve rules
+
+<!-- SERVE_TABLE -->
+"""
 
 
 def load(name):
     p = os.path.join(HERE, name)
     return json.load(open(p)) if os.path.exists(p) else []
+
+
+def sweep_table():
+    """One row per stored campaign: grid size + headline aggregates."""
+    from repro.sweep import aggregate, default_root, discover
+
+    root = default_root()
+    lines = ["| sweep | op | backends | points | mean success | headline |",
+             "|---|---|---|---|---|---|"]
+    n = 0
+    for spec, store in discover(root):
+        recs = store.records()
+        if not recs:
+            continue
+        n += 1
+        mean = aggregate.mean_success(recs)
+        head = "; ".join(f"{k}={v:+.4f}"
+                         for k, v in aggregate.headline(recs).items())
+        lines.append(
+            f"| {spec.name} | {spec.op} | {','.join(spec.backends)} | "
+            f"{len(recs)}/{spec.n_points()} | {mean:.4f} | {head or '—'} |")
+    return "\n".join(lines) if n else "(no sweep records under " + root + ")"
 
 
 def fmt(x, nd=3):
@@ -84,7 +133,12 @@ def main():
     serve_table = "\n".join(lines)
 
     p = os.path.join(HERE, "..", "EXPERIMENTS.md")
-    text = open(p).read()
+    text = open(p).read() if os.path.exists(p) else SCAFFOLD
+    if "<!-- SWEEP_TABLE -->" not in text:
+        # A previous run consumed the markers; regenerate from the
+        # scaffold so re-runs refresh tables instead of silently no-oping.
+        text = SCAFFOLD
+    text = text.replace("<!-- SWEEP_TABLE -->", sweep_table())
     text = text.replace("<!-- DRYRUN_TABLE -->", dryrun_table)
     text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table)
     text = text.replace("<!-- SERVE_TABLE -->", serve_table)

@@ -2,30 +2,35 @@
 subprocesses (fresh device state each), with per-arch microbatches,
 merging results into one JSON.
 
-Before launching cells it runs a PUD-backend preflight: a short parity
-check of the configured execution backend (PUD_BACKEND env or
---pud-backend, default "pallas") against the oracle, so a bad backend
-choice fails in seconds rather than after hours of compiles."""
-import json, os, subprocess, sys, time
+Before launching cells it runs a PUD-backend preflight: a tiny
+`repro.sweep` campaign (MAJX + Multi-RowCopy grids, ideal contexts) of
+the configured execution backend (PUD_BACKEND env or --pud-backend,
+default "pallas"), whose per-point records must all show success 1.0
+against the oracle reference — so a bad backend choice fails in seconds
+rather than after hours of compiles."""
+import json, os, subprocess, sys, tempfile, time
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def pud_preflight(backend_name: str) -> None:
     sys.path.insert(0, os.path.join(REPO, "src"))
-    import numpy as np
-    from repro.backends import ExecutionContext, get_backend
+    import shutil
+    from repro.sweep import presets, run_sweep
 
-    rng = np.random.default_rng(0)
-    be = get_backend(backend_name, ExecutionContext(ideal=True))
-    ref = get_backend("oracle")
-    planes = rng.integers(0, 2**32, (5, 8, 64), dtype=np.uint32)
-    assert (np.asarray(be.majx(planes))
-            == np.asarray(ref.majx(planes))).all(), backend_name
-    src = rng.integers(0, 2**32, (64,), dtype=np.uint32)
-    assert (np.asarray(be.rowcopy(src, 7))
-            == np.asarray(ref.rowcopy(src, 7))).all(), backend_name
-    print(f"[preflight] backend '{backend_name}' parity vs oracle OK",
+    # A fresh store each invocation: a cached preflight checks nothing.
+    root = tempfile.mkdtemp(prefix="pud_preflight_")
+    try:
+        for spec in presets.preflight_specs(backend_name):
+            result = run_sweep(spec, root)
+            bad = [r for r in result.records if r["success"] < 1.0]
+            assert not bad, (
+                f"backend '{backend_name}' lost parity vs oracle on "
+                f"{spec.op} points: "
+                f"{[(r['x'], r['n_act'], r['success']) for r in bad]}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    print(f"[preflight] backend '{backend_name}' sweep parity vs oracle OK",
           flush=True)
 ARCHS = ["mixtral-8x22b", "qwen3-moe-235b-a22b", "chatglm3-6b", "gemma-7b",
          "deepseek-coder-33b", "glm4-9b", "zamba2-1.2b", "musicgen-medium",
@@ -40,11 +45,17 @@ def main():
     args = sys.argv[1:]
     if "--pud-backend" in args:
         i = args.index("--pud-backend")
+        if i + 1 >= len(args):
+            sys.exit("--pud-backend requires a backend name")
         backend = args[i + 1]
         del args[i:i + 2]
+    # out_path: first non-flag argument, wherever the flags sit —
+    # validated *before* the preflight so usage errors fail instantly.
+    out_path = next((a for a in args if not a.startswith("--")), None)
+    if out_path is None:
+        sys.exit("usage: run_all_cells.py OUT_JSON [--pud-backend NAME] "
+                 "[--multipod] [--skip-cost] [--serve-rules]")
     pud_preflight(backend)
-    # out_path: first non-flag argument, wherever the flags sit
-    out_path = next(a for a in args if not a.startswith("--"))
     results = []
     if os.path.exists(out_path):
         results = json.load(open(out_path))

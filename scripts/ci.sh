@@ -1,10 +1,20 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + a ~30s backend-parity smoke.
+# CI entry point: tier-1 suite + backend-parity smoke + sweep smoke + docs check.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== tier-1: full test suite =="
 python -m pytest -x -q
+
+echo "== sweep smoke (<=16 grid points, interpret) + resume check =="
+SWEEP_CI_ROOT=$(mktemp -d)
+PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet
+# identical spec, second invocation: every chunk must come from the store
+PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet --expect-cached
+rm -rf "$SWEEP_CI_ROOT"
+
+echo "== docs check (module paths in docs/*.md resolve) =="
+python scripts/check_docs.py
 
 echo "== backend-parity smoke (oracle / sim / pallas) =="
 PYTHONPATH=src python - <<'PY'

@@ -37,21 +37,43 @@ from repro.pud.isa import Program
 
 @dataclasses.dataclass(frozen=True)
 class Capabilities:
-    """What a backend models / how it executes."""
+    """What a backend models / how it executes.
+
+    Consumers branch on this instead of on backend names: the sweep
+    planner batches chunks for ``native_batch`` executors, the offload
+    planner checks ``accelerated``, and characterization filters grids
+    by ``max_majx`` / ``n_act_levels``.
+
+    Attributes:
+        name: registry name the backend was instantiated under.
+        description: one-line human summary of the execution model.
+        stochastic: True when the paper-calibrated per-cell error
+            surfaces (Obs 1-18) are injected; exact digital results
+            otherwise.  ``ExecutionContext(ideal=True)`` forces False.
+        device_model: True when ops execute through the behavioural
+            ``Subarray``/``PUDDevice`` APA/PRE/ACT command model rather
+            than closed-form boolean semantics.
+        accelerated: True when bulk ops dispatch Pallas TPU kernels
+            (interpret mode on CPU, compiled on real TPUs).
+        max_majx: widest MAJ arity this backend can execute.  For the
+            calibrated ``sim`` backend this is the manufacturer limit
+            (fn 11: 9 for Mfr H, 7 for Mfr M); digital backends are
+            unbounded in arity (reported as a large sentinel).
+        n_act_levels: reachable simultaneous-activation counts
+            (§4 Limitation 2: powers of two up to 32).
+        native_batch: True when ``majx_batch`` is a single vmapped
+            kernel dispatch rather than a python loop — the property
+            the sweep planner exploits to fuse a chunk of grid points
+            into one launch.
+    """
 
     name: str
     description: str
-    #: injects the paper-calibrated per-cell error surfaces
     stochastic: bool
-    #: executes through the behavioural Subarray/PUDDevice command model
     device_model: bool
-    #: dispatches Pallas TPU kernels (interpret or compiled)
     accelerated: bool
-    #: widest MAJ arity this backend can execute
     max_majx: int
-    #: reachable simultaneous-activation counts
     n_act_levels: tuple[int, ...]
-    #: bulk batch dispatch is vmapped (vs a python loop)
     native_batch: bool
 
 
@@ -66,7 +88,12 @@ class Backend(abc.ABC):
     # ------------------------------------------------------------ protocol
     @abc.abstractmethod
     def capabilities(self) -> Capabilities:
-        ...
+        """Self-description for capability-based dispatch.
+
+        May depend on ``self.ctx`` (e.g. ``sim`` reports the active
+        manufacturer's MAJ arity limit, and ``stochastic=False`` under
+        an ideal context).
+        """
 
     @abc.abstractmethod
     def majx(self, planes: jax.Array, x: Optional[int] = None,

@@ -37,25 +37,36 @@ class Timings:
 class ExecutionContext:
     """Shared calibration point + execution knobs for all backends.
 
+    Frozen and hashable: a context *is* an operating-regime identity,
+    which is how the sweep runner caches one backend instance per
+    distinct regime and how a grid point's regime becomes part of its
+    stored record.  Derive variants with :meth:`replace`.
+
     Operating regime (device physics; consumed by ``sim`` and by latency
     / energy costing):
 
     * ``mfr`` — manufacturer profile ("H" / "M" / "S", Table 1),
-    * ``timings`` — the issued (t1, t2) pairs,
-    * ``temp_c`` / ``vpp_v`` / ``pattern`` — environment (Obs 3/4, 9-13),
-    * ``ideal`` — disable stochastic error injection (pure semantics).
+    * ``timings`` — the issued (t1, t2) pairs per op class,
+    * ``temp_c`` — DRAM temperature in Celsius (paper grid 50-90),
+    * ``vpp_v`` — wordline voltage in volts (nominal 2.5, down to 2.1),
+    * ``pattern`` — data pattern written to operand rows; one of
+      :data:`repro.core.calibration.DATA_PATTERNS` (Obs 9/16),
+    * ``ideal`` — disable stochastic error injection (pure digital
+      semantics; every backend then matches the oracle bit-exactly).
 
     Compiler defaults (consumed by the bit-serial §8.1 programs):
 
     * ``tier`` — widest MAJ gate available (3/5/7/9),
-    * ``n_act`` — simultaneous-activation count per MAJ issue.
+    * ``n_act`` — simultaneous-activation count per MAJ issue
+      (§4 Limitation 2: one of 2/4/8/16/32).
 
     Framework execution knobs:
 
     * ``interpret`` — Pallas interpret mode (CPU) vs compiled TPU,
     * ``block_r`` / ``block_c`` — VPU tile geometry for bulk kernels,
     * ``subarray_cols`` — behavioural-sim row width (bits),
-    * ``seed`` — stable-mask RNG seed for the simulator.
+    * ``seed`` — stable-mask RNG seed: the chip / row-group identity;
+      sweeps treat distinct seeds as distinct tested chips.
     """
 
     mfr: str = "H"

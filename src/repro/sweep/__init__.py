@@ -1,0 +1,37 @@
+"""Characterization-campaign engine: declarative, sharded, resumable.
+
+The paper's central artifact is not one kernel call but a *campaign*:
+success-rate surfaces swept over simultaneous-activation count, MAJ
+arity, data pattern, violated timings, temperature, and voltage across
+120 chips.  This package reproduces that shape over the unified
+:mod:`repro.backends` executor API:
+
+>>> from repro.sweep import SweepSpec, run_sweep, aggregate
+>>> spec = SweepSpec(name="demo", op="majx", backends=("sim",),
+...                  x_values=(3,), n_act=(4, 32))
+>>> result = run_sweep(spec, root="results/sweeps")
+>>> aggregate.replication_delta(result.records)   # Obs 6 headline
+0.3...
+
+Pipeline: :class:`~repro.sweep.spec.SweepSpec` (the grid, content-hashed)
+-> :mod:`~repro.sweep.planner` (backend-native batches / chunks)
+-> :mod:`~repro.sweep.runner` (execute; shard across workers and the
+device mesh) -> :mod:`~repro.sweep.store` (atomic per-chunk files;
+restart skips completed chunks) -> :mod:`~repro.sweep.aggregate`
+(headline tables).  ``python -m repro.sweep.run --smoke`` exercises the
+whole pipeline in seconds; see ``docs/SWEEPS.md``.
+"""
+
+from repro.sweep import aggregate, presets  # noqa: F401
+from repro.sweep.planner import Chunk, plan, shard  # noqa: F401
+from repro.sweep.runner import (SweepResult, records_for,  # noqa: F401
+                                run_sweep)
+from repro.sweep.spec import (ANALYTIC, GridPoint, SweepSpec,  # noqa: F401
+                              load_spec)
+from repro.sweep.store import RecordStore, default_root, discover  # noqa: F401
+
+__all__ = [
+    "ANALYTIC", "Chunk", "GridPoint", "RecordStore", "SweepResult",
+    "SweepSpec", "aggregate", "default_root", "discover", "load_spec",
+    "plan", "presets", "records_for", "run_sweep", "shard",
+]

@@ -1,0 +1,84 @@
+"""Grid planner: carve a sweep grid into backend-native batches.
+
+The runner's unit of work (and of resume) is a :class:`Chunk` — a
+contiguous slice of grid points that one backend can execute as a
+single batch.  Points are grouped by *batch signature* before chunking:
+
+* ``majx``: (backend, x, rows, words) — every point in the chunk stacks
+  to one ``(B, X, R, C)`` tensor, which the ``pallas`` backend dispatches
+  as a single vmapped ``majx_batch`` kernel launch and the ``sim`` /
+  ``oracle`` backends execute point-by-point;
+* ``mrc``: (backend, n_dest) — bulk ``rowcopy`` calls share a fan-out;
+* ``simra`` / ``analytic``: (backend,) — vectorized surface evaluation.
+
+Chunk keys are derived from the dense point indices, which are stable
+for a given spec (see :meth:`repro.sweep.spec.SweepSpec.points`), so a
+restarted campaign maps its chunks onto the completed set exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.sweep.spec import ANALYTIC, GridPoint, SweepSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """A batch of grid points executed and persisted as one unit."""
+
+    key: str
+    backend: str
+    points: tuple[GridPoint, ...]
+
+    @property
+    def indices(self) -> tuple[int, ...]:
+        return tuple(p.index for p in self.points)
+
+
+def _signature(spec: SweepSpec, p: GridPoint) -> tuple:
+    if p.backend == ANALYTIC or spec.op == "simra":
+        return (p.backend,)
+    if spec.op == "majx":
+        return (p.backend, p.x, spec.rows, spec.words)
+    return (p.backend, p.n_dest)
+
+
+def _chunk_key(points: Iterable[GridPoint]) -> str:
+    idx = [p.index for p in points]
+    return f"chunk-{min(idx):06d}-{max(idx):06d}"
+
+
+def plan(spec: SweepSpec) -> list[Chunk]:
+    """All chunks of a sweep, in deterministic execution order."""
+    groups: dict[tuple, list[GridPoint]] = {}
+    order: list[tuple] = []
+    for p in spec.points():
+        sig = _signature(spec, p)
+        if sig not in groups:
+            groups[sig] = []
+            order.append(sig)
+        groups[sig].append(p)
+
+    chunks: list[Chunk] = []
+    for sig in order:
+        pts = groups[sig]
+        for i in range(0, len(pts), spec.chunk):
+            batch = tuple(pts[i:i + spec.chunk])
+            chunks.append(Chunk(_chunk_key(batch), batch[0].backend, batch))
+    return chunks
+
+
+def shard(chunks: list[Chunk], num_shards: int, shard_index: int
+          ) -> list[Chunk]:
+    """Round-robin partition of chunks across ``num_shards`` workers.
+
+    Deterministic in chunk order, so independent workers given the same
+    spec agree on the partition without coordination; each worker writes
+    disjoint chunk files into the shared record store.
+    """
+    if not 0 <= shard_index < num_shards:
+        raise ValueError(f"shard_index {shard_index} outside "
+                         f"[0, {num_shards})")
+    return [c for i, c in enumerate(chunks) if i % num_shards == shard_index]

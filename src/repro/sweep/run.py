@@ -1,0 +1,112 @@
+"""CLI: run characterization sweeps.
+
+.. code-block:: bash
+
+    # <=16-point executable smoke grid on sim + pallas (interpret):
+    python -m repro.sweep.run --smoke
+
+    # one paper figure's grid (see --list-figures):
+    python -m repro.sweep.run --figure fig6
+
+    # a custom campaign from a JSON spec, worker 2 of 4:
+    python -m repro.sweep.run --spec campaign.json --shards 4 --shard-index 2
+
+Record stores land under ``--root`` (default ``$REPRO_SWEEP_ROOT`` or
+``./results/sweeps``), one directory per spec hash.  Re-running with an
+unchanged spec executes only missing chunks; ``--expect-cached`` turns
+"nothing left to execute" into an exit-code assertion, which is how CI
+verifies resume semantics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+from repro.sweep import aggregate, presets
+from repro.sweep.runner import run_sweep
+from repro.sweep.spec import SweepSpec, load_spec
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.sweep.run",
+        description="Run a characterization sweep (see docs/SWEEPS.md).")
+    what = p.add_mutually_exclusive_group()
+    what.add_argument("--smoke", action="store_true",
+                      help="<=16-point executable parity grid")
+    what.add_argument("--figure", metavar="NAME",
+                      help="a paper-figure preset (--list-figures)")
+    what.add_argument("--spec", metavar="FILE",
+                      help="JSON SweepSpec file")
+    p.add_argument("--list-figures", action="store_true",
+                   help="list figure presets and exit")
+    p.add_argument("--root", default=None,
+                   help="record-store root (default: $REPRO_SWEEP_ROOT "
+                        "or ./results/sweeps)")
+    p.add_argument("--backends", default=None,
+                   help="comma-separated backend override, e.g. sim,pallas")
+    p.add_argument("--shards", type=int, default=1,
+                   help="total workers cooperating on this sweep")
+    p.add_argument("--shard-index", type=int, default=0,
+                   help="this worker's index in [0, --shards)")
+    p.add_argument("--max-chunks", type=int, default=None,
+                   help="stop after N chunks (partial run; resumable)")
+    p.add_argument("--expect-cached", action="store_true",
+                   help="fail if any chunk had to execute (CI resume check)")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress per-chunk progress lines")
+    return p
+
+
+def _resolve_spec(args) -> SweepSpec:
+    if args.spec:
+        spec = load_spec(args.spec)
+    elif args.figure:
+        try:
+            spec = presets.FIGURE_SPECS[args.figure]()
+        except KeyError:
+            sys.exit(f"unknown figure {args.figure!r}; "
+                     f"known: {sorted(presets.FIGURE_SPECS)}")
+    else:  # --smoke is also the default action
+        spec = presets.smoke_spec()
+    if args.backends:
+        try:
+            spec = spec.replace(backends=tuple(args.backends.split(",")))
+        except ValueError as e:
+            sys.exit(str(e))
+    return spec
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+    if args.list_figures:
+        for name, builder in presets.FIGURE_SPECS.items():
+            print(f"{name:8s} {builder.__doc__.splitlines()[0]}")
+        return 0
+
+    spec = _resolve_spec(args)
+    result = run_sweep(
+        spec, args.root, num_shards=args.shards,
+        shard_index=args.shard_index, max_chunks=args.max_chunks,
+        progress=not args.quiet)
+    print(result.summary())
+
+    if result.records:
+        head = aggregate.headline(result.records)
+        for k, v in head.items():
+            print(f"  {k} = {v:+.4f}")
+        by_op = aggregate.group_mean(result.records, ("op", "backend"))
+        for (op, be), s in by_op.items():
+            print(f"  mean success [{op}/{be}] = {s:.4f}")
+
+    if args.expect_cached and result.executed_chunks:
+        print(f"--expect-cached: {result.executed_chunks} chunks executed "
+              f"(wanted 0)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

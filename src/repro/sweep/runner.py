@@ -1,0 +1,262 @@
+"""Sweep runner: execute planned chunks and stream records to the store.
+
+Execution model:
+
+* chunks already present in the :class:`~repro.sweep.store.RecordStore`
+  are skipped (resume); the remainder is optionally partitioned across
+  workers with ``num_shards`` / ``shard_index`` (disjoint by
+  construction, see :func:`repro.sweep.planner.shard`);
+* a chunk whose backend reports ``native_batch`` (``pallas``) executes
+  as one stacked ``(B, X, R, C)`` vmapped kernel dispatch; when a device
+  mesh is supplied the stacked batch is placed with
+  :func:`repro.dist.sharding.sharding_for` over the mesh's data axis,
+  so the B grid points of the chunk spread across local devices;
+* other backends execute point-by-point through the same bulk API;
+* the ``analytic`` pseudo-backend evaluates the calibrated
+  :class:`~repro.core.errormodel.ErrorModel` surface — exact at every
+  paper anchor, no data movement.
+
+Every record carries both the *measured* success rate (bit-compare
+against the oracle reference, the paper's §3.1 metric) and the
+*expected* success from the calibrated surface at the same operating
+point, so aggregation can diff behaviour against calibration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.backends import Backend, ExecutionContext, Timings, get_backend
+from repro.core.errormodel import ErrorModel
+from repro.sweep import planner
+from repro.sweep.spec import ANALYTIC, GridPoint, SweepSpec
+from repro.sweep.store import RecordStore, default_root
+
+#: Word values for the fixed data patterns of §3.1 (pairs alternate
+#: across operand planes; single-valued patterns fill the row).
+_PATTERN_WORDS = {
+    "0x00/0xFF": (0x00000000, 0xFFFFFFFF),
+    "0xAA/0x55": (0xAAAAAAAA, 0x55555555),
+    "0xCC/0x33": (0xCCCCCCCC, 0x33333333),
+    "0x66/0x99": (0x66666666, 0x99999999),
+    "0x00": (0x00000000, 0x00000000),
+    "0xFF": (0xFFFFFFFF, 0xFFFFFFFF),
+}
+
+
+def _rng(spec: SweepSpec, p: GridPoint) -> np.random.Generator:
+    """Data generator keyed by everything *except* backend/environment.
+
+    Two backends measuring the same logical point see identical input
+    data, which is what makes cross-backend record parity meaningful.
+    """
+    return np.random.default_rng(
+        [p.seed, p.x, p.n_act, spec.rows, spec.words, 0x51338A])
+
+
+def _planes(pattern: str, shape: tuple[int, ...],
+            rng: np.random.Generator) -> np.ndarray:
+    if pattern == "random":
+        return rng.integers(0, 2 ** 32, shape, dtype=np.uint32)
+    a, b = _PATTERN_WORDS[pattern]
+    out = np.empty(shape, dtype=np.uint32)
+    # Alternate the pair along axis 0: across operand planes for MAJX
+    # stacks, across words for a single MRC source row.
+    out[0::2], out[1::2] = a, b
+    return out
+
+
+def _success(got, want) -> tuple[float, int]:
+    got = np.asarray(got, np.uint32)
+    want = np.asarray(want, np.uint32)
+    n_bits = got.size * 32
+    bad = int(np.unpackbits((got ^ want).view(np.uint8)).sum())
+    return 1.0 - bad / n_bits, n_bits
+
+
+def _context(spec: SweepSpec, p: GridPoint) -> ExecutionContext:
+    timings = {"majx": dict(majx_t1=p.t1, majx_t2=p.t2),
+               "mrc": dict(mrc_t1=p.t1, mrc_t2=p.t2),
+               "simra": dict(simra_t1=p.t1, simra_t2=p.t2)}[p.op]
+    return ExecutionContext(
+        mfr=p.mfr, timings=Timings(**timings), temp_c=p.temp_c,
+        vpp_v=p.vpp_v, pattern=p.pattern if p.op == "majx" else "random",
+        ideal=spec.ideal, n_act=p.n_act, interpret=spec.interpret,
+        seed=p.seed)
+
+
+def _expected(p: GridPoint) -> float:
+    em = ErrorModel(p.mfr)
+    if p.op == "majx":
+        return em.majx_success(p.x, p.n_act, t1=p.t1, t2=p.t2,
+                               pattern=p.pattern, temp_c=p.temp_c,
+                               vpp_v=p.vpp_v)
+    if p.op == "mrc":
+        return em.mrc_success(p.n_dest, t1=p.t1, t2=p.t2, pattern=p.pattern,
+                              temp_c=p.temp_c, vpp_v=p.vpp_v)
+    return em.simra_success(p.n_act, t1=p.t1, t2=p.t2, temp_c=p.temp_c,
+                            vpp_v=p.vpp_v)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """What one :func:`run_sweep` invocation did and produced.
+
+    ``executed_chunks`` ran in this invocation; ``cached_chunks`` were
+    already complete in the store; ``pending_chunks`` belong to other
+    shards or fell past ``max_chunks`` — they are *not* done yet.
+    """
+
+    spec: SweepSpec
+    store_path: str
+    n_points: int
+    executed_chunks: int
+    cached_chunks: int
+    pending_chunks: int
+    records: list[dict]
+
+    def summary(self) -> str:
+        pending = (f", {self.pending_chunks} pending"
+                   if self.pending_chunks else "")
+        return (f"sweep '{self.spec.name}' [{self.spec.spec_hash()}]: "
+                f"{self.n_points} points, {self.executed_chunks} chunks "
+                f"executed, {self.cached_chunks} cached{pending} -> "
+                f"{len(self.records)} records at {self.store_path}")
+
+
+class _Executor:
+    """Measurement engine for one sweep.
+
+    Backend instances are cached *per chunk* (see :meth:`execute`):
+    a chunk's records must be a pure function of (spec, chunk) so that
+    kill/resume and worker sharding — which change *which process*
+    executes a chunk, and in what order — can never change measured
+    values.  A process-lifetime cache would leak mutable backend state
+    (e.g. the ``sim`` backend's round-robin subarray cursor) across
+    chunks and break that guarantee.
+    """
+
+    def __init__(self, spec: SweepSpec, mesh=None):
+        self.spec = spec
+        self.mesh = mesh
+        self._backends: dict[tuple, Backend] = {}
+        self._oracle = get_backend("oracle")
+
+    def backend(self, p: GridPoint) -> Backend:
+        ctx = _context(self.spec, p)
+        key = (p.backend, ctx)
+        if key not in self._backends:
+            self._backends[key] = get_backend(p.backend, ctx)
+        return self._backends[key]
+
+    # ---------------------------------------------------------- per point
+    def _measure_majx(self, p: GridPoint) -> dict:
+        shape = (p.x, self.spec.rows, self.spec.words)
+        planes = _planes(p.pattern, shape, _rng(self.spec, p))
+        want = np.asarray(self._oracle.majx(planes))
+        got = self.backend(p).majx(planes, x=p.x, n_act=p.n_act)
+        success, n_bits = _success(got, want)
+        return dict(p.record_base(), success=success,
+                    expected=_expected(p), n_bits=n_bits)
+
+    def _measure_mrc(self, p: GridPoint) -> dict:
+        src = _planes(p.pattern, (self.spec.words,), _rng(self.spec, p))
+        want = np.asarray(self._oracle.rowcopy(src, p.n_dest))
+        got = self.backend(p).rowcopy(src, p.n_dest)
+        success, n_bits = _success(got, want)
+        return dict(p.record_base(), success=success,
+                    expected=_expected(p), n_bits=n_bits)
+
+    def _analytic(self, p: GridPoint) -> dict:
+        s = _expected(p)
+        return dict(p.record_base(), success=s, expected=s, n_bits=0)
+
+    # --------------------------------------------------------- per chunk
+    def _majx_batched(self, chunk: planner.Chunk) -> list[dict]:
+        """One vmapped kernel dispatch for the whole chunk (pallas)."""
+        import jax
+
+        pts = chunk.points
+        batch = np.stack([
+            _planes(p.pattern, (p.x, self.spec.rows, self.spec.words),
+                    _rng(self.spec, p)) for p in pts])  # (B, X, R, C)
+        if self.mesh is not None:
+            from repro.dist.sharding import sharding_for
+            batch = jax.device_put(batch, sharding_for(
+                batch.shape, ("batch", None, None, None), self.mesh))
+        be = self.backend(pts[0])
+        got = np.asarray(be.majx_batch(batch))           # (B, R, C)
+        # Same reference source as the per-point path: the oracle backend.
+        want = np.asarray(self._oracle.majx_batch(np.asarray(batch)))
+        out = []
+        for i, p in enumerate(pts):
+            success, n_bits = _success(got[i], want[i])
+            out.append(dict(p.record_base(), success=success,
+                            expected=_expected(p), n_bits=n_bits))
+        return out
+
+    def execute(self, chunk: planner.Chunk) -> list[dict]:
+        # Fresh backend instances per chunk: records depend only on
+        # (spec, chunk), never on which chunks this process ran before.
+        self._backends.clear()
+        if chunk.backend == ANALYTIC or self.spec.op == "simra":
+            return [self._analytic(p) for p in chunk.points]
+        if self.spec.op == "majx":
+            caps = self.backend(chunk.points[0]).capabilities()
+            # The fused batch path runs the whole chunk under one
+            # ExecutionContext, so it is only valid for backends whose
+            # results are regime-insensitive (digital: no error
+            # injection, no device model).  Regime-sensitive executors
+            # fall back to per-point contexts — correct, just unfused.
+            if (caps.native_batch and len(chunk.points) > 1
+                    and not caps.stochastic and not caps.device_model
+                    and len({p.x for p in chunk.points}) == 1):
+                return self._majx_batched(chunk)
+            return [self._measure_majx(p) for p in chunk.points]
+        return [self._measure_mrc(p) for p in chunk.points]
+
+
+def run_sweep(spec: SweepSpec, root: Optional[str] = None, *,
+              num_shards: int = 1, shard_index: int = 0,
+              max_chunks: Optional[int] = None, mesh=None,
+              progress: bool = False) -> SweepResult:
+    """Execute (the missing part of) a sweep and return all records.
+
+    Resume semantics: chunks whose files already exist in the store are
+    never re-executed; a run over a fully-populated store performs zero
+    executions.  ``max_chunks`` bounds this invocation's work (used by
+    tests to simulate a mid-campaign kill); ``num_shards``/``shard_index``
+    restrict this worker to its deterministic share of the plan.
+    """
+    store = RecordStore(default_root(root), spec)
+    chunks = planner.plan(spec)
+    done = store.completed()
+    todo = [c for c in planner.shard(chunks, num_shards, shard_index)
+            if c.key not in done]
+    if max_chunks is not None:
+        todo = todo[:max_chunks]
+
+    ex = _Executor(spec, mesh=mesh)
+    for i, chunk in enumerate(todo):
+        records = ex.execute(chunk)
+        store.put(chunk, records)
+        if progress:
+            print(f"[sweep {spec.name}] {chunk.key} "
+                  f"({i + 1}/{len(todo)}, {len(records)} points)",
+                  flush=True)
+
+    cached = sum(1 for c in chunks if c.key in done)
+    return SweepResult(
+        spec=spec, store_path=store.path, n_points=spec.n_points(),
+        executed_chunks=len(todo), cached_chunks=cached,
+        pending_chunks=len(chunks) - cached - len(todo),
+        records=store.records())
+
+
+def records_for(spec: SweepSpec, root: Optional[str] = None,
+                **run_kw) -> list[dict]:
+    """Records of a sweep, running whatever the store is missing."""
+    return run_sweep(spec, root, **run_kw).records

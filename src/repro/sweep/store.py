@@ -1,0 +1,140 @@
+"""Resumable on-disk record store, keyed by the spec's content hash.
+
+Layout (one directory per campaign):
+
+.. code-block:: text
+
+    <root>/<name>-<spec_hash>/
+        spec.json                     # the full SweepSpec, for audit
+        chunks/chunk-000000-000007.json
+        chunks/chunk-000008-000015.json
+        ...
+
+Each chunk file holds the records of one planned :class:`~repro.sweep.
+planner.Chunk` and is written atomically (temp file + ``os.replace``),
+so a killed sweep leaves either a complete chunk or no chunk — never a
+torn one.  Completion is the existence of the chunk file; a restarted
+run lists ``chunks/`` and skips everything already present, which is
+the whole resume protocol.  Different specs hash to different
+directories, so stale records can never satisfy a changed campaign.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Iterator, Optional
+
+from repro.sweep.planner import Chunk
+from repro.sweep.spec import SweepSpec
+
+
+class RecordStore:
+    """Append-only per-campaign store of per-point success records."""
+
+    def __init__(self, root: str, spec: SweepSpec):
+        self.spec = spec
+        self.path = os.path.join(root, spec.store_name())
+        self._chunk_dir = os.path.join(self.path, "chunks")
+        os.makedirs(self._chunk_dir, exist_ok=True)
+        spec_path = os.path.join(self.path, "spec.json")
+        if not os.path.exists(spec_path):
+            self._atomic_write(spec_path, spec.to_json())
+
+    @classmethod
+    def bound(cls, path: str, spec: SweepSpec) -> "RecordStore":
+        """Read-only binding to an *existing* campaign directory.
+
+        Unlike the constructor it neither creates directories nor
+        re-derives the path from the spec hash, so discovery keeps
+        working on stores written under an older physics fingerprint.
+        """
+        obj = object.__new__(cls)
+        obj.spec = spec
+        obj.path = path
+        obj._chunk_dir = os.path.join(path, "chunks")
+        return obj
+
+    # ------------------------------------------------------------ writing
+    @staticmethod
+    def _atomic_write(path: str, text: str) -> None:
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def put(self, chunk: Chunk, records: list[dict]) -> None:
+        """Persist one completed chunk (atomic; marks it done)."""
+        payload = {"key": chunk.key, "backend": chunk.backend,
+                   "indices": list(chunk.indices), "records": records}
+        self._atomic_write(os.path.join(self._chunk_dir, chunk.key + ".json"),
+                           json.dumps(payload))
+
+    # ------------------------------------------------------------ reading
+    def completed(self) -> set[str]:
+        """Keys of chunks already on disk (the resume set)."""
+        if not os.path.isdir(self._chunk_dir):
+            return set()
+        return {f[:-len(".json")] for f in os.listdir(self._chunk_dir)
+                if f.endswith(".json")}
+
+    def records(self) -> list[dict]:
+        """All stored records, ordered by grid-point index."""
+        out: list[dict] = []
+        if not os.path.isdir(self._chunk_dir):
+            return out
+        for f in sorted(os.listdir(self._chunk_dir)):
+            if not f.endswith(".json"):
+                continue
+            with open(os.path.join(self._chunk_dir, f)) as fh:
+                out.extend(json.load(fh)["records"])
+        out.sort(key=lambda r: r["index"])
+        return out
+
+    def n_completed_points(self) -> int:
+        return len(self.records())
+
+
+def discover(root: str) -> Iterator[tuple[SweepSpec, "RecordStore"]]:
+    """Iterate every campaign stored under ``root`` (for reporting).
+
+    Binds each store to the directory it was found in (read-only) and
+    skips campaigns whose spec no longer parses under the current
+    schema, so reporting never crashes on — or mkdirs next to — legacy
+    stores.
+    """
+    if not os.path.isdir(root):
+        return
+    for name in sorted(os.listdir(root)):
+        path = os.path.join(root, name)
+        spec_path = os.path.join(path, "spec.json")
+        if not os.path.exists(spec_path):
+            continue
+        try:
+            with open(spec_path) as f:
+                spec = SweepSpec.from_json(f.read())
+        except (TypeError, ValueError):
+            continue  # written under an older spec schema
+        yield spec, RecordStore.bound(path, spec)
+
+
+def default_root(explicit: Optional[str] = None) -> str:
+    """Resolve the record-store root: explicit > $REPRO_SWEEP_ROOT >
+    ``<repo>/results/sweeps``.
+
+    Repo-relative (not CWD-relative), so the CLI, the figure benchmarks,
+    and ``results/make_tables.py`` all see the same stores no matter
+    where they are invoked from.
+    """
+    if explicit:
+        return explicit
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))  # src/repro/sweep/..
+    return os.environ.get("REPRO_SWEEP_ROOT",
+                          os.path.join(repo, "results", "sweeps"))

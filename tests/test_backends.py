@@ -33,12 +33,19 @@ def test_registry_unknown_name_raises():
 
 
 def test_registry_accepts_new_backend():
-    @register_backend("oracle2")
-    class Oracle2(get_backend("oracle").__class__):
-        pass
+    from repro.backends import _REGISTRY
 
-    assert "oracle2" in available_backends()
-    assert isinstance(get_backend("oracle2"), Backend)
+    before = dict(_REGISTRY)
+    try:
+        @register_backend("oracle2")
+        class Oracle2(get_backend("oracle").__class__):
+            pass
+
+        assert "oracle2" in available_backends()
+        assert isinstance(get_backend("oracle2"), Backend)
+    finally:  # don't leak the test backend into the process registry
+        _REGISTRY.clear()
+        _REGISTRY.update(before)
 
 
 def test_capabilities_shape():

@@ -1,0 +1,236 @@
+"""Sweep engine: spec identity, planning, resumability, record parity.
+
+The load-bearing guarantees: a killed campaign restarts without
+recomputing or changing its aggregates; the same grid measured by
+oracle / sim / pallas under ideal contexts yields identical records;
+the analytic pseudo-backend equals the calibrated ErrorModel surface.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.core.errormodel import ErrorModel
+from repro.sweep import (ANALYTIC, RecordStore, SweepSpec, aggregate, plan,
+                         presets, run_sweep, shard)
+from repro.sweep.run import main as sweep_cli
+
+TINY = dict(x_values=(3,), n_act=(4, 32), ideal=True, rows=2, words=16,
+            chunk=2)
+
+
+# ------------------------------------------------------------ spec / grid
+
+
+def test_spec_hash_stable_and_content_sensitive():
+    a = SweepSpec(name="s", **TINY)
+    assert a.spec_hash() == SweepSpec(name="s", **TINY).spec_hash()
+    assert a.spec_hash() != a.replace(n_act=(32,)).spec_hash()
+    assert a.spec_hash() != a.replace(seeds=(1,)).spec_hash()
+
+
+def test_spec_json_roundtrip():
+    spec = SweepSpec(name="rt", op="mrc", backends=("sim",),
+                     timings=((36.0, 3.0),), n_act=(8,))
+    again = SweepSpec.from_json(spec.to_json())
+    assert again == spec and again.spec_hash() == spec.spec_hash()
+
+
+def test_grid_drops_unreachable_combinations():
+    spec = SweepSpec(name="g", op="majx", x_values=(3, 5), n_act=(4, 32))
+    pts = list(spec.points())
+    # MAJ5@4-row cannot hold five operands and is filtered (§3.3).
+    assert all(not (p.x == 5 and p.n_act == 4) for p in pts)
+    assert len(pts) == 3
+    assert [p.index for p in pts] == [0, 1, 2]  # dense, stable indices
+
+
+def test_spec_rejects_bad_axes():
+    with pytest.raises(ValueError, match="not reachable"):
+        SweepSpec(name="bad", n_act=(6,))
+    with pytest.raises(ValueError, match="patterns"):
+        SweepSpec(name="bad", op="majx", patterns=("0x00",))
+    with pytest.raises(ValueError, match="odd"):
+        SweepSpec(name="bad", x_values=(4,))
+    with pytest.raises(ValueError, match="unknown backends"):
+        SweepSpec(name="bad", backends=("palas",))
+    with pytest.raises(ValueError, match="analytic-only"):
+        SweepSpec(name="bad", op="simra", backends=("sim",))
+
+
+# --------------------------------------------------------------- planning
+
+
+def test_plan_chunks_partition_grid():
+    spec = SweepSpec(name="p", backends=("sim", "pallas"), **TINY)
+    chunks = plan(spec)
+    seen = [p.index for c in chunks for p in c.points]
+    assert sorted(seen) == list(range(spec.n_points()))
+    assert all(len(c.points) <= spec.chunk for c in chunks)
+    # one backend per chunk (the unit of backend-native batching)
+    assert all(len({p.backend for p in c.points}) == 1 for c in chunks)
+
+
+def test_shard_partition_disjoint_and_complete():
+    spec = SweepSpec(name="sh", backends=("sim", "pallas"), **TINY)
+    chunks = plan(spec)
+    parts = [shard(chunks, 3, i) for i in range(3)]
+    keys = [c.key for p in parts for c in p]
+    assert sorted(keys) == sorted(c.key for c in chunks)
+    assert len(set(keys)) == len(keys)
+
+
+# ----------------------------------------------------- execution / resume
+
+
+def test_sweep_executes_then_fully_caches(tmp_path):
+    spec = SweepSpec(name="cache", backends=("sim",), **TINY)
+    first = run_sweep(spec, str(tmp_path))
+    assert first.executed_chunks > 0 and first.cached_chunks == 0
+    assert len(first.records) == spec.n_points()
+
+    second = run_sweep(spec, str(tmp_path))
+    assert second.executed_chunks == 0
+    assert second.cached_chunks == first.executed_chunks
+    assert second.records == first.records
+
+
+def test_resume_after_kill_recomputes_nothing(tmp_path):
+    """Kill mid-sweep (max_chunks), restart: only missing chunks run and
+    aggregates equal an uninterrupted run's."""
+    spec = SweepSpec(name="kill", backends=("sim",), seeds=(0, 1), **TINY)
+    total = len(plan(spec))
+    assert total >= 2
+
+    partial = run_sweep(spec, str(tmp_path / "a"), max_chunks=1)
+    assert partial.executed_chunks == 1
+
+    # mtimes identify recomputation of already-stored chunks
+    store = RecordStore(str(tmp_path / "a"), spec)
+    before = {k: os.path.getmtime(os.path.join(store.path, "chunks",
+                                               k + ".json"))
+              for k in store.completed()}
+
+    resumed = run_sweep(spec, str(tmp_path / "a"))
+    assert resumed.executed_chunks == total - 1
+    for k, mt in before.items():
+        assert os.path.getmtime(os.path.join(
+            store.path, "chunks", k + ".json")) == mt
+
+    uninterrupted = run_sweep(spec, str(tmp_path / "b"))
+    assert resumed.records == uninterrupted.records
+    assert (aggregate.headline(resumed.records)
+            == aggregate.headline(uninterrupted.records))
+
+
+def test_sharded_workers_complete_one_store(tmp_path):
+    spec = SweepSpec(name="workers", backends=("sim", "pallas"), **TINY)
+    r0 = run_sweep(spec, str(tmp_path), num_shards=2, shard_index=0)
+    assert len(r0.records) < spec.n_points()
+    r1 = run_sweep(spec, str(tmp_path), num_shards=2, shard_index=1)
+    assert len(r1.records) == spec.n_points()
+    assert run_sweep(spec, str(tmp_path)).executed_chunks == 0
+
+
+# ----------------------------------------------------------- record parity
+
+
+def test_backend_record_parity_on_tiny_grid(tmp_path):
+    """oracle / sim / pallas sweep records agree point-for-point under
+    ideal contexts (same data, same reference, success exactly 1.0)."""
+    spec = SweepSpec(name="parity", backends=("oracle", "sim", "pallas"),
+                     patterns=("random", "0x00/0xFF"), **TINY)
+    records = run_sweep(spec, str(tmp_path)).records
+    assert len(records) == spec.n_points()
+    by_backend = {}
+    for r in records:
+        key = (r["x"], r["n_act"], r["pattern"], r["seed"])
+        by_backend.setdefault(r["backend"], {})[key] = (
+            r["success"], r["n_bits"])
+    assert set(by_backend) == {"oracle", "sim", "pallas"}
+    assert by_backend["oracle"] == by_backend["sim"] == by_backend["pallas"]
+    assert all(s == 1.0 for recs in by_backend.values()
+               for s, _ in recs.values())
+
+
+def test_mrc_sweep_parity(tmp_path):
+    spec = SweepSpec(name="mrc-parity", op="mrc",
+                     backends=("sim", "pallas"), n_act=(8, 32),
+                     ideal=True, words=16, chunk=4)
+    records = run_sweep(spec, str(tmp_path)).records
+    assert {r["n_dest"] for r in records} == {7, 31}
+    assert all(r["success"] == 1.0 for r in records)
+
+
+def test_analytic_matches_errormodel(tmp_path):
+    spec = presets.fig6_spec()
+    records = run_sweep(spec, str(tmp_path)).records
+    em = ErrorModel("H")
+    for r in records:
+        want = em.majx_success(r["x"], r["n_act"], t1=r["t1"], t2=r["t2"],
+                               pattern=r["pattern"], temp_c=r["temp_c"],
+                               vpp_v=r["vpp_v"])
+        assert r["success"] == pytest.approx(want)
+        assert r["expected"] == pytest.approx(want)
+    # Obs 6 headline falls out of the aggregation layer
+    assert aggregate.replication_delta(records) == pytest.approx(
+        0.3081, abs=1e-4)
+
+
+def test_stochastic_records_independent_of_execution_history(tmp_path):
+    """Measured values must be a pure function of (spec, chunk): a
+    killed-and-resumed stochastic sweep and a 2-shard stochastic sweep
+    produce records identical to an uninterrupted single-worker run."""
+    spec = SweepSpec(name="det", backends=("sim",), x_values=(3, 5),
+                     n_act=(32,), rows=2, words=32, chunk=1)
+    baseline = run_sweep(spec, str(tmp_path / "base")).records
+
+    run_sweep(spec, str(tmp_path / "resumed"), max_chunks=1)
+    resumed = run_sweep(spec, str(tmp_path / "resumed")).records
+    assert resumed == baseline
+
+    run_sweep(spec, str(tmp_path / "sharded"), num_shards=2, shard_index=1)
+    sharded = run_sweep(spec, str(tmp_path / "sharded"),
+                        num_shards=2, shard_index=0)
+    assert run_sweep(spec, str(tmp_path / "sharded")).records == baseline
+    assert sharded.pending_chunks == 0
+
+
+def test_stochastic_sim_tracks_calibration(tmp_path):
+    spec = SweepSpec(name="stoch", backends=("sim",), x_values=(3,),
+                     n_act=(4, 32), rows=2, words=64, chunk=8)
+    records = run_sweep(spec, str(tmp_path)).records
+    for r in records:
+        assert r["success"] == pytest.approx(r["expected"], abs=0.05)
+    assert aggregate.replication_delta(records) > 0.15  # Obs 6 ordering
+
+
+# ------------------------------------------------------------------- CLI
+
+
+def test_cli_smoke_and_expect_cached(tmp_path, capsys):
+    root = str(tmp_path)
+    assert sweep_cli(["--smoke", "--root", root, "--quiet"]) == 0
+    # second run: fully cached; --expect-cached enforces zero executions
+    assert sweep_cli(["--smoke", "--root", root, "--quiet",
+                      "--expect-cached"]) == 0
+    out = capsys.readouterr().out
+    assert "0 chunks executed" in out
+
+    # a changed spec gets a different store: --expect-cached now fails
+    assert sweep_cli(["--figure", "fig3", "--root", root, "--quiet",
+                      "--expect-cached"]) == 1
+
+
+def test_store_chunk_files_are_self_describing(tmp_path):
+    spec = SweepSpec(name="audit", backends=("sim",), **TINY)
+    result = run_sweep(spec, str(tmp_path))
+    store_dir = result.store_path
+    with open(os.path.join(store_dir, "spec.json")) as f:
+        assert SweepSpec.from_json(f.read()) == spec
+    chunk_files = sorted(os.listdir(os.path.join(store_dir, "chunks")))
+    assert chunk_files
+    with open(os.path.join(store_dir, "chunks", chunk_files[0])) as f:
+        payload = json.load(f)
+    assert payload["indices"] == [r["index"] for r in payload["records"]]
