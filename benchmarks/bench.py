@@ -1,0 +1,203 @@
+"""``repro.bench``: per-op vs fused Program execution harness.
+
+Times the same addressed :class:`~repro.pud.isa.Program` through
+``Backend.run`` (one kernel launch per MAJ/MRC op) and
+``Backend.run_fused`` (one launch per schedule dispatch group, see
+:mod:`repro.compile`) for the paper-motivated workloads — bit-serial
+adder / multiplier (§8.1) and the Multi-RowCopy secure-erase wave
+(§8.2) — and writes a machine-readable ``BENCH_fused.json`` so the perf
+trajectory of the fusion layer is recorded run over run (schema in
+``docs/BENCH.md``).
+
+Usage::
+
+    python -m benchmarks.bench --smoke            # CI-size, ~seconds
+    python -m benchmarks.bench                    # full sizes
+    python -m benchmarks.bench --backends oracle pallas sim
+
+Every row carries both wall-clock timings and *structural* dispatch
+counts; the CI gate asserts on the latter (fused < per-op for the
+32-bit adder), which needs no timing stability.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCHEMA = "repro-bench/fused-v1"
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "BENCH_fused.json")
+
+
+# --------------------------------------------------------------- workloads
+def _adder(nbits: int, lanes: int):
+    """Traced §8.1 ripple-carry adder over ``lanes`` bit-serial lanes."""
+    import numpy as np
+
+    from repro.compile import compile_elementwise
+
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 2 ** 32, lanes, dtype=np.uint32)
+    b = rng.integers(0, 2 ** 32, lanes, dtype=np.uint32)
+    if nbits < 32:
+        mask = np.uint32((1 << nbits) - 1)
+        a, b = a & mask, b & mask
+    cp = compile_elementwise("add", a, b, tier=5, n_act=32)
+    return cp.program, cp.state
+
+
+def _multiplier(nbits: int, lanes: int):
+    """Traced shift-and-add multiplier restricted to ``nbits`` planes."""
+    import numpy as np
+
+    from repro.compile import trace_planes
+    from repro.core import bitplanes as bp
+
+    rng = np.random.default_rng(11)
+    bits_a = rng.integers(0, 2, (nbits, lanes)).astype(bool)
+    bits_b = rng.integers(0, 2, (nbits, lanes)).astype(bool)
+    A = bp.pack(bits_a)
+    B = bp.pack(bits_b)
+    cp = trace_planes(lambda bs: list(bs.mul(A, B)), tier=5, n_act=32)
+    return cp.program, cp.state
+
+
+def _erase(waves: int, fanout: int, words: int):
+    """§8.2 Multi-RowCopy bank wipe: one WR'd pattern row fans out to
+    ``waves`` disjoint ``fanout``-row groups (all independent — a
+    single dependency level, so the fused path is one dispatch)."""
+    import numpy as np
+
+    from repro.pud.isa import Program
+
+    prog = Program()
+    prog.emit("WR", tag="erase/pattern")
+    row = 1
+    for w in range(waves):
+        prog.emit("MRC", n_act=fanout + 1, tag=f"erase/wave[{w}]",
+                  srcs=(0,), dsts=tuple(range(row, row + fanout)))
+        row += fanout
+    state = np.zeros((row, words), np.uint32)
+    state[0] = 0xDEADBEEF  # the predetermined wipe pattern
+    return prog, state
+
+
+def _workloads(smoke: bool):
+    if smoke:
+        return {
+            "add32": lambda: _adder(32, 64),
+            "mul8": lambda: _multiplier(8, 64),
+            "erase_mrc31": lambda: _erase(waves=8, fanout=31, words=64),
+        }
+    return {
+        "add32": lambda: _adder(32, 4096),
+        "mul16": lambda: _multiplier(16, 4096),
+        "erase_mrc31": lambda: _erase(waves=64, fanout=31, words=2048),
+    }
+
+
+# ----------------------------------------------------------------- driver
+def _timed(fn, reps: int):
+    import jax
+
+    out = fn()           # warm-up: jit/pallas compile paths
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def bench_program(name: str, prog, state, backend_names, reps: int):
+    import numpy as np
+
+    from repro.backends import ExecutionContext, get_backend
+    from repro.compile import build_schedule
+
+    sched = build_schedule(prog)
+    ideal = ExecutionContext(ideal=True)
+    want = np.asarray(get_backend("oracle", ideal).run(prog, state))
+    rows = []
+    for be_name in backend_names:
+        be = get_backend(be_name, ideal)
+        modes = {}
+        for mode, runner in (("per_op", be.run), ("fused", be.run_fused)):
+            be.reset_dispatches()
+            wall, out = _timed(lambda r=runner: r(prog, state), reps)
+            # counters accumulate over warm-up + reps: report per run
+            dispatches = be.dispatch_count // (reps + 1)
+            modes[mode] = {"wall_s": wall, "dispatches": dispatches}
+            modes[mode]["parity"] = bool((np.asarray(out) == want).all())
+        rows.append({
+            "name": name,
+            "backend": be_name,
+            "n_ops": len(prog.ops),
+            "n_levels": sched.n_levels,
+            "per_op": modes["per_op"],
+            "fused": modes["fused"],
+            "speedup": modes["per_op"]["wall_s"]
+            / max(modes["fused"]["wall_s"], 1e-12),
+            "dispatch_reduction": modes["per_op"]["dispatches"]
+            / max(modes["fused"]["dispatches"], 1),
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size workloads, 1 timing rep")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="output JSON path (default results/BENCH_fused.json)")
+    ap.add_argument("--backends", nargs="+", default=["oracle", "pallas"],
+                    help="executors to time (sim is slow: opt in)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timing repetitions (default: 1 smoke, 3 full)")
+    args = ap.parse_args(argv)
+    reps = args.reps or (1 if args.smoke else 3)
+
+    rows = []
+    for name, build in _workloads(args.smoke).items():
+        prog, state = build()
+        print(f"[bench] {name}: {len(prog.ops)} ops ...", flush=True)
+        rows.extend(bench_program(name, prog, state, args.backends, reps))
+
+    doc = {
+        "schema": SCHEMA,
+        "smoke": args.smoke,
+        "reps": reps,
+        "interpret": True,
+        "workloads": rows,
+    }
+    out_path = os.path.abspath(args.out)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"[bench] wrote {out_path}")
+
+    for r in rows:
+        flag = "" if r["per_op"]["parity"] and r["fused"]["parity"] else \
+            "  !! PARITY MISMATCH"
+        print(f"  {r['name']:12s} [{r['backend']:7s}] "
+              f"per-op {r['per_op']['wall_s']*1e3:8.1f} ms "
+              f"/{r['per_op']['dispatches']:5d} disp | fused "
+              f"{r['fused']['wall_s']*1e3:8.1f} ms "
+              f"/{r['fused']['dispatches']:5d} disp | "
+              f"{r['speedup']:5.2f}x wall, "
+              f"{r['dispatch_reduction']:5.1f}x dispatch{flag}")
+    bad = [r for r in rows
+           if not (r["per_op"]["parity"] and r["fused"]["parity"])]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,6 +13,34 @@ PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet
 PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet --expect-cached
 rm -rf "$SWEEP_CI_ROOT"
 
+echo "== program-fusion differential + golden suites =="
+PYTHONPATH=src python -m pytest -q tests/test_compile_differential.py \
+    tests/test_compile_golden.py
+
+echo "== bench smoke: per-op vs fused (structural dispatch gate) =="
+BENCH_CI_ROOT=$(mktemp -d)
+PYTHONPATH=src python -m benchmarks.bench --smoke \
+    --out "$BENCH_CI_ROOT/BENCH_fused.json"
+PYTHONPATH=src python - "$BENCH_CI_ROOT/BENCH_fused.json" <<'PY'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "repro-bench/fused-v1", doc["schema"]
+rows = {(r["name"], r["backend"]): r for r in doc["workloads"]}
+assert len({n for n, _ in rows}) >= 3, sorted(rows)
+add = rows[("add32", "pallas")]
+# Structural perf gate (no timing stability needed): the fused 32-bit
+# adder must launch fewer kernels than per-op, within its level budget.
+assert add["fused"]["dispatches"] < add["per_op"]["dispatches"], add
+assert add["fused"]["dispatches"] <= add["n_levels"], add
+assert all(r["per_op"]["parity"] and r["fused"]["parity"]
+           for r in doc["workloads"])
+print(f"bench gate OK: add32 fused {add['fused']['dispatches']} vs "
+      f"per-op {add['per_op']['dispatches']} dispatches "
+      f"({add['n_levels']} levels)")
+PY
+rm -rf "$BENCH_CI_ROOT"
+
 echo "== docs check (module paths in docs/*.md resolve) =="
 python scripts/check_docs.py
 

@@ -8,7 +8,10 @@ interface:
   packed uint32 bit-planes (the layout of :mod:`repro.core.bitplanes`);
 * **programs** — ``run(program, state)`` interprets a
   :class:`repro.pud.isa.Program` whose ops carry row addresses against a
-  ``(rows, words)`` subarray image;
+  ``(rows, words)`` subarray image, and ``run_fused(program, state)``
+  executes the same program through the :mod:`repro.compile` fusion
+  scheduler (bit-identical results; batch-native backends collapse each
+  dependency level into one kernel dispatch);
 * **compiled arithmetic** — ``elementwise(op, a, b)`` drives the §8.1
   bit-serial compiler with this backend as the gate executor, so the
   recorded Program and the computed values come from the same run.
@@ -84,6 +87,13 @@ class Backend(abc.ABC):
 
     def __init__(self, ctx: Optional[ExecutionContext] = None):
         self.ctx = ctx or ExecutionContext()
+        #: Kernel launches issued so far (bulk-op or program execution).
+        #: Only accelerated backends increment it; it is the structural
+        #: metric the fusion layer optimizes and repro.bench records.
+        self.dispatch_count = 0
+
+    def reset_dispatches(self) -> None:
+        self.dispatch_count = 0
 
     # ------------------------------------------------------------ protocol
     @abc.abstractmethod
@@ -148,6 +158,18 @@ class Backend(abc.ABC):
         for op in program.ops:
             state = self._exec_op(op, state)
         return state
+
+    def run_fused(self, program: Program, state: jax.Array) -> jax.Array:
+        """Execute an addressed Program through the fusion scheduler.
+
+        Semantically identical to :meth:`run` (verified adversarially in
+        tests/test_compile_differential.py).  The default falls back to
+        per-op interpretation, so device-model and reference backends
+        keep their exact command-level semantics; backends with native
+        batch dispatch (``pallas``) override this with level-batched
+        kernel launches (see :mod:`repro.compile.schedule`).
+        """
+        return self.run(program, state)
 
     def _exec_op(self, op, state: jax.Array) -> jax.Array:
         if not op.dsts:

@@ -269,7 +269,23 @@ def run_elementwise(op: str, a, b, tier: int = 3, n_act: int = 4,
     shape; they are flattened into bit-serial lanes.  ``executor``
     selects where each recorded gate computes (default: logical oracle);
     see :class:`GateExecutor` / :mod:`repro.backends`.
+
+    Executors with native batch dispatch (``pallas``) take the *fused*
+    path: the gate stream is first lowered to an addressed Program
+    (:func:`repro.compile.compile_elementwise`) and then executed in
+    level-batched kernel dispatches via ``executor.run_fused`` — the
+    values still come from that executor's kernels, and the returned
+    Program additionally carries row addresses (same op histogram as the
+    per-gate recording).
     """
+    caps = getattr(executor, "capabilities", None)
+    if caps is not None and executor.capabilities().native_batch:
+        from repro.compile import compile_elementwise
+
+        cp = compile_elementwise(op, a, b, tier=tier, n_act=n_act)
+        final = executor.run_fused(cp.program, cp.state)
+        return cp.outputs(final), cp.program
+
     a = jnp.asarray(a, jnp.uint32).reshape(-1)
     b = jnp.asarray(b, jnp.uint32).reshape(-1)
     k = a.shape[0]

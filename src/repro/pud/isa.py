@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
 from typing import Iterable
 
 from repro.core.errormodel import ErrorModel, expected_retries
@@ -57,6 +58,20 @@ class Program:
         for op in self.ops:
             h[(op.kind, op.x, op.n_act)] += 1
         return dict(h)
+
+    # -------------------------------------------------------- serialization
+    def to_json(self) -> str:
+        """Canonical JSON form (golden-program regression fixtures)."""
+        return json.dumps([dataclasses.asdict(op) for op in self.ops])
+
+    @classmethod
+    def from_json(cls, text: str) -> "Program":
+        prog = cls()
+        for raw in json.loads(text):
+            prog.emit(raw["kind"], x=raw["x"], n_act=raw["n_act"],
+                      tag=raw["tag"], srcs=tuple(raw["srcs"]),
+                      dsts=tuple(raw["dsts"]))
+        return prog
 
     # ------------------------------------------------------------- costing
     def latency_ns(

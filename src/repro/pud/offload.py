@@ -32,6 +32,12 @@ from repro.pud import latency as lat
 HBM_BYTES_PER_S = 819e9
 PEAK_FLOPS = 197e12
 
+#: Host-side overhead per kernel launch (ns) on the TPU path — the
+#: quantity program fusion amortizes, exactly as PULSAR amortizes DRAM
+#: command overhead across simultaneously activated rows.  Order of a
+#: couple microseconds for a dispatch round-trip.
+KERNEL_LAUNCH_NS = 2_000.0
+
 
 @dataclasses.dataclass(frozen=True)
 class OffloadDecision:
@@ -89,6 +95,58 @@ def pud_mrc_ns(n_bytes: int, fanout: int,
     rows = -(-(n_bytes * 8) // lat.ROW_BITS)
     waves = -(-rows // subarrays)
     return waves * lat.LAT.mrc * expected_retries(s)
+
+
+def tpu_program_ns(program, row_bytes: int, *, fused: bool = True,
+                   sched=None) -> float:
+    """TPU-side cost of executing an addressed Program's bulk ops.
+
+    Bandwidth term: every value op moves ``len(srcs) + len(dsts)`` rows
+    through HBM.  Launch term: one :data:`KERNEL_LAUNCH_NS` per kernel
+    dispatch — the per-op interpreter launches one kernel per MAJ/MRC
+    op, the fused path one per schedule dispatch group (see
+    :mod:`repro.compile.schedule`), which is what makes fusion the
+    default executor for deep programs.  Pass a prebuilt ``sched`` to
+    avoid re-leveling the program.
+    """
+    from repro.compile.schedule import VALUE_KINDS, build_schedule
+
+    if sched is None:
+        sched = build_schedule(program)
+    dispatches = (sched.n_dispatches() if fused
+                  else sched.per_op_dispatches())
+    rows_moved = sum(len(op.srcs) + len(op.dsts) for op in program.ops
+                     if op.dsts and op.kind in VALUE_KINDS)
+    bw_ns = rows_moved * row_bytes / HBM_BYTES_PER_S * 1e9
+    return dispatches * KERNEL_LAUNCH_NS + bw_ns
+
+
+def plan_program(program, row_bytes: int,
+                 errors: Optional[ErrorModel] = None,
+                 ctx: Optional[ExecutionContext] = None) -> OffloadDecision:
+    """Where should a whole addressed Program run?
+
+    Prices the PUD side with the program's retry-aware command schedule
+    (:meth:`repro.pud.isa.Program.latency_ns`) and the TPU side with the
+    *fused* dispatch count, so the decision reflects the executor the
+    ``pallas`` backend actually uses.  Consumers: the serve engine's
+    integrity-vote hook records one decision per healed program.
+    """
+    from repro.compile.schedule import build_schedule
+
+    ctx, errors = _resolve(ctx, errors)
+    sched = build_schedule(program)
+    tpu = tpu_program_ns(program, row_bytes, fused=True, sched=sched)
+    pud = program.latency_ns(errors, **ctx.env())
+    winner = "pud" if pud < tpu else "tpu"
+    n_ops = sum(1 for op in program.ops if op.dsts)
+    return OffloadDecision(
+        op=f"program[{n_ops}ops]", n_bytes=row_bytes, tpu_ns=tpu,
+        pud_ns=pud, winner=winner,
+        detail=(f"tpu fused: {sched.n_dispatches()} dispatches over "
+                f"{sched.n_levels} levels (vs {sched.per_op_dispatches()} "
+                f"per-op); pud: retry-aware command schedule"),
+    )
 
 
 def plan_vote(n_bytes: int, x: int = 3, errors: ErrorModel | None = None,

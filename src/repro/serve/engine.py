@@ -67,26 +67,63 @@ class Engine:
 
         ``replicas``: >= 3 (odd) pytrees with the engine's param structure.
         Installs the healed params and returns the number of corrected
-        bits.  The offload planner's verdict for each vote is appended to
+        bits.
+
+        The whole vote is ONE addressed Program: every leaf's packed
+        words are concatenated per replica and tiled into subarray rows,
+        one MAJ op per row-image, and the program runs through
+        ``self.pud.run_fused`` — a single-level schedule the ``pallas``
+        backend executes as one batched MAJX dispatch (vs one dispatch
+        per parameter leaf before fusion).  The offload planner's
+        verdict for the fused program is appended to
         ``self.pud_decisions`` (advisory: where the vote would run on
         PUD-capable memory).
         """
-        from repro.pud.offload import plan_vote
+        from repro.core import calibration as cal
+        from repro.kernels import tiling
+        from repro.pud.isa import Program
+        from repro.pud.offload import plan_program
 
         x = len(replicas)
         flats = [jax.tree.leaves(r) for r in replicas]
         treedef = jax.tree.structure(replicas[0])
-        healed_leaves, fixed_bits = [], 0
-        for leaf_reps in zip(*flats):
-            words = [bp.bitcast_to_planes(r) for r in leaf_reps]
-            stacked = jnp.stack([w for w, _, _ in words])
-            voted = self.pud.majx(stacked, x=x)
-            _, shape, dtype = words[0]
-            fixed_bits += int(self.pud.mismatch(stacked[0], voted))
-            healed_leaves.append(bp.bitcast_from_planes(voted, shape, dtype))
-            self.pud_decisions.append(
-                plan_vote(int(stacked[0].size) * 4, x=x, ctx=self.pud.ctx))
+        metas = []  # (n_words, shape, dtype) per leaf, for re-splitting
+        for leaf in flats[0]:
+            w, shape, dtype = bp.bitcast_to_planes(leaf)
+            metas.append((int(w.size), shape, dtype))
+        rep_words = [
+            jnp.concatenate([bp.bitcast_to_planes(leaf)[0].reshape(-1)
+                             for leaf in flat])
+            for flat in flats
+        ]
+        total = int(rep_words[0].size)
+        width = min(tiling.MAX_BLOCK_C, total)
+        tiles = [tiling.words_to_rows(w, width) for w in rep_words]
+        n_rows = tiles[0].shape[0]
+
+        # One MAJ op per row-image; all ops are level 0 -> one dispatch.
+        # Votes issue at the full 32-row activation (the §5 replication
+        # ladder's best success rate — the same point plan_vote prices).
+        prog = Program()
+        n_act = max(cal.N_ACT_LEVELS)
+        for r in range(n_rows):
+            prog.emit("MAJ", x=x, n_act=n_act, tag=f"heal/row[{r}]",
+                      srcs=tuple(rep * n_rows + r for rep in range(x)),
+                      dsts=(x * n_rows + r,))
+        state = jnp.concatenate(
+            tiles + [jnp.zeros((n_rows, width), jnp.uint32)])
+        final = self.pud.run_fused(prog, state)
+        voted = final[x * n_rows:].reshape(-1)[:total]
+        fixed_bits = int(self.pud.mismatch(rep_words[0], voted))
+
+        healed_leaves, off = [], 0
+        for n_words, shape, dtype in metas:
+            healed_leaves.append(bp.bitcast_from_planes(
+                voted[off:off + n_words], shape, dtype))
+            off += n_words
         self.params = jax.tree.unflatten(treedef, healed_leaves)
+        self.pud_decisions.append(
+            plan_program(prog, width * 4, ctx=self.pud.ctx))
         return fixed_bits
 
     def verify_params(self, reference) -> float:

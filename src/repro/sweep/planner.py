@@ -19,8 +19,9 @@ restarted campaign maps its chunks onto the completed set exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Iterable, Sequence
 
+from repro.pud.isa import Program
 from repro.sweep.spec import ANALYTIC, GridPoint, SweepSpec
 
 
@@ -68,6 +69,34 @@ def plan(spec: SweepSpec) -> list[Chunk]:
             batch = tuple(pts[i:i + spec.chunk])
             chunks.append(Chunk(_chunk_key(batch), batch[0].backend, batch))
     return chunks
+
+
+def fused_majx_program(points: Sequence[GridPoint], rows: int
+                       ) -> tuple[Program, int]:
+    """Lower one majx chunk to an addressed Program for ``run_fused``.
+
+    Row layout of the expected state image (width = ``spec.words``):
+    operand plane ``i`` of point ``b``'s row-image ``r`` lives at row
+    ``(b * x + i) * rows + r``; the chunk's stacked ``(B, X, R, C)``
+    data tensor reshapes to exactly this (then ``B * R`` zeroed output
+    rows are appended).  Every MAJ op is independent, so the whole chunk
+    is one dependency level — one batched kernel dispatch on the
+    ``pallas`` backend, the same fusion the §8.1 programs get, instead
+    of a planner-private batching path.
+
+    Returns ``(program, out_base)`` with outputs for point ``b`` at rows
+    ``out_base + b * rows + r``.
+    """
+    x = points[0].x
+    prog = Program()
+    out_base = len(points) * x * rows
+    for b, p in enumerate(points):
+        for r in range(rows):
+            prog.emit(
+                "MAJ", x=x, n_act=p.n_act, tag=f"sweep/pt{p.index}[{r}]",
+                srcs=tuple((b * x + i) * rows + r for i in range(x)),
+                dsts=(out_base + b * rows + r,))
+    return prog, out_base
 
 
 def shard(chunks: list[Chunk], num_shards: int, shard_index: int

@@ -6,9 +6,12 @@ Execution model:
   are skipped (resume); the remainder is optionally partitioned across
   workers with ``num_shards`` / ``shard_index`` (disjoint by
   construction, see :func:`repro.sweep.planner.shard`);
-* a chunk whose backend reports ``native_batch`` (``pallas``) executes
-  as one stacked ``(B, X, R, C)`` vmapped kernel dispatch; when a device
-  mesh is supplied the stacked batch is placed with
+* a chunk whose backend reports ``native_batch`` (``pallas``) lowers to
+  an addressed single-level Program and executes through
+  ``Backend.run_fused`` as one batched kernel dispatch (the
+  :mod:`repro.compile` fusion engine); when a device mesh is supplied
+  the stacked ``(B, X, R, C)`` batch instead goes through the vmapped
+  ``majx_batch`` path placed with
   :func:`repro.dist.sharding.sharding_for` over the mesh's data axis,
   so the B grid points of the chunk spread across local devices;
 * other backends execute point-by-point through the same bulk API;
@@ -176,19 +179,35 @@ class _Executor:
 
     # --------------------------------------------------------- per chunk
     def _majx_batched(self, chunk: planner.Chunk) -> list[dict]:
-        """One vmapped kernel dispatch for the whole chunk (pallas)."""
+        """One fused kernel dispatch for the whole chunk (pallas).
+
+        The chunk lowers to an addressed single-level Program
+        (:func:`repro.sweep.planner.fused_majx_program`) executed via
+        ``run_fused`` — the same fusion engine the §8.1 programs use.
+        Under a device mesh the stacked batch instead goes through the
+        sharded ``majx_batch`` path, which places the B grid points
+        across local devices (still one vmapped dispatch).
+        """
         import jax
 
         pts = chunk.points
+        rows, words = self.spec.rows, self.spec.words
         batch = np.stack([
-            _planes(p.pattern, (p.x, self.spec.rows, self.spec.words),
+            _planes(p.pattern, (p.x, rows, words),
                     _rng(self.spec, p)) for p in pts])  # (B, X, R, C)
+        be = self.backend(pts[0])
         if self.mesh is not None:
             from repro.dist.sharding import sharding_for
-            batch = jax.device_put(batch, sharding_for(
+            placed = jax.device_put(batch, sharding_for(
                 batch.shape, ("batch", None, None, None), self.mesh))
-        be = self.backend(pts[0])
-        got = np.asarray(be.majx_batch(batch))           # (B, R, C)
+            got = np.asarray(be.majx_batch(placed))      # (B, R, C)
+        else:
+            prog, out_base = planner.fused_majx_program(pts, rows)
+            state = np.concatenate([
+                batch.reshape(-1, words),
+                np.zeros((len(pts) * rows, words), np.uint32)])
+            final = np.asarray(be.run_fused(prog, state))
+            got = final[out_base:].reshape(len(pts), rows, words)
         # Same reference source as the per-point path: the oracle backend.
         want = np.asarray(self._oracle.majx_batch(np.asarray(batch)))
         out = []

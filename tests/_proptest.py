@@ -1,10 +1,14 @@
 """Seeded random-sweep property testing (hypothesis is not installable in
 this offline container; this keeps the same many-cases + explicit-edges
-discipline with deterministic seeds)."""
+discipline with deterministic seeds).
+
+The leading underscore marks this as a *helper* module, deliberately
+outside pytest's ``test_*.py`` collection pattern: it must never define
+tests of its own (``tests/test_compile_differential.py`` has a meta-test
+enforcing that for every helper under ``tests/``, so no coverage can go
+silently uncollected)."""
 
 from __future__ import annotations
-
-import functools
 
 import numpy as np
 import pytest

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from proptest import rand_u32, sweep
+from _proptest import rand_u32, sweep
 from repro.core.errormodel import ErrorModel
 from repro.pud.arith import BitSerial, run_elementwise
 from repro.core import bitplanes as bp

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import rand_u32
+from _proptest import rand_u32
 from repro.backends import (ExecutionContext, available_backends,
                             get_backend, register_backend)
 from repro.backends.base import Backend

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from proptest import rand_bits, rand_u32, sweep
+from _proptest import rand_bits, rand_u32, sweep
 from repro.core import bitplanes as bp
 
 

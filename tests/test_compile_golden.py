@@ -1,0 +1,85 @@
+"""Golden-program regression tests.
+
+tests/golden/*.json freeze canonical serialized Programs (ripple-carry
+adders, MAJ5/7/9 reduction trees, fan-out-31 Multi-RowCopy waves) with
+their expected output bitplanes under fixed seeds — regenerate with
+``tests/golden/generate.py`` only on intentional semantic changes.  A
+scheduler change that reorders ops but alters results fails here loudly,
+on every backend and on both execution paths.
+"""
+
+import glob
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backends import ExecutionContext, get_backend
+from repro.compile import build_schedule
+from repro.pud.isa import Program
+
+IDEAL = ExecutionContext(ideal=True)
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_FILES = sorted(glob.glob(os.path.join(GOLDEN_DIR, "*.json")))
+
+
+def _load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    prog = Program()
+    for raw in doc["ops"]:
+        prog.emit(raw["kind"], x=raw["x"], n_act=raw["n_act"],
+                  tag=raw["tag"], srcs=tuple(raw["srcs"]),
+                  dsts=tuple(raw["dsts"]))
+    rng = np.random.default_rng((doc["seed"], 0x601D))
+    state = rng.integers(0, 2 ** 32, (doc["rows"], doc["words"]),
+                         dtype=np.uint32)
+    expected = np.array(
+        [[int(row[i:i + 8], 16) for i in range(0, len(row), 8)]
+         for row in doc["expected"]], dtype=np.uint32)
+    return doc, prog, state, expected
+
+
+def test_fixture_set_is_complete():
+    names = {os.path.basename(p)[:-5] for p in GOLDEN_FILES}
+    assert {"add8", "add16", "add32", "maj5_tree", "maj7_tree",
+            "maj9_tree", "mrc_fanout31"} <= names
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[os.path.basename(p)[:-5]
+                               for p in GOLDEN_FILES])
+def test_golden_program_all_backends_both_paths(path):
+    doc, prog, state, expected = _load(path)
+    assert prog.n_rows() == doc["rows"]
+    state = jnp.asarray(state)
+    for name in ("oracle", "sim", "pallas"):
+        be = get_backend(name, IDEAL)
+        for mode, run in (("per_op", be.run), ("fused", be.run_fused)):
+            got = np.asarray(run(prog, state))
+            assert (got == expected).all(), (doc["name"], name, mode)
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[os.path.basename(p)[:-5]
+                               for p in GOLDEN_FILES])
+def test_golden_fused_dispatch_budget(path):
+    """Fused execution of every golden stays within its level budget and
+    never exceeds the per-op launch count."""
+    _, prog, state, _ = _load(path)
+    sched = build_schedule(prog)
+    pal = get_backend("pallas", IDEAL)
+    pal.reset_dispatches()
+    pal.run_fused(prog, jnp.asarray(state))
+    assert pal.dispatch_count == sched.n_dispatches()
+    assert pal.dispatch_count <= sched.n_levels or sched.n_levels == 0
+    assert sched.n_dispatches() <= sched.per_op_dispatches()
+
+
+def test_serialization_roundtrip():
+    _, prog, _, _ = _load(GOLDEN_FILES[0])
+    again = Program.from_json(prog.to_json())
+    assert again.ops == prog.ops
+    assert again.histogram() == prog.histogram()

@@ -2,7 +2,7 @@
 
 import pytest
 
-from proptest import sweep
+from _proptest import sweep
 from repro.core.decoder import RowDecoder, fig13_32row_example, fig14_example
 
 

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import rand_u32, sweep
+from _proptest import rand_u32, sweep
 from repro.core import bitplanes as bp
 from repro.kernels.bitserial.ops import add_u32, bitserial_add
 from repro.kernels.bitserial.ref import bitserial_add_ref

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from proptest import rand_u32, sweep
+from _proptest import rand_u32, sweep
 from repro.pud.device import DeviceConfig, PUDDevice
 from repro.core.subarray import DeviceProfile
 

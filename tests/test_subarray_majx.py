@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import rand_u32, sweep
+from _proptest import rand_u32, sweep
 from repro.core import calibration as cal
 from repro.core import commands as cmd
 from repro.core import majx as mj

@@ -124,6 +124,46 @@ def test_resume_after_kill_recomputes_nothing(tmp_path):
             == aggregate.headline(uninterrupted.records))
 
 
+def test_resume_invalidated_by_calibration_fingerprint_change(
+        tmp_path, monkeypatch):
+    """Editing the calibrated physics must orphan cached records, not
+    silently serve them: the spec hash folds in the calibration/
+    errormodel source fingerprint, so the same grid re-executes from
+    scratch in a fresh store while the stale store stays untouched."""
+    import repro.sweep.spec as spec_mod
+
+    spec = SweepSpec(name="fp", backends=("sim",), **TINY)
+    first = run_sweep(spec, str(tmp_path))
+    assert first.executed_chunks > 0
+    old_hash = spec.spec_hash()
+    old_store = RecordStore(str(tmp_path), spec)
+    old_mtimes = {k: os.path.getmtime(os.path.join(
+        old_store.path, "chunks", k + ".json"))
+        for k in old_store.completed()}
+    assert old_mtimes
+
+    # A physics edit changes the module fingerprint...
+    monkeypatch.setattr(spec_mod, "_model_fingerprint", lambda: "0badcafe")
+    assert spec.spec_hash() != old_hash
+
+    # ...so resuming the identical grid recomputes every chunk into a
+    # new store instead of reusing stale records.
+    second = run_sweep(spec, str(tmp_path))
+    assert second.executed_chunks == first.executed_chunks
+    assert second.cached_chunks == 0
+    assert second.store_path != first.store_path
+
+    # The pre-change store is preserved verbatim for audit.
+    for k, mt in old_mtimes.items():
+        assert os.path.getmtime(os.path.join(
+            old_store.path, "chunks", k + ".json")) == mt
+
+    # And a third run under the new fingerprint is fully cached again.
+    third = run_sweep(spec, str(tmp_path))
+    assert third.executed_chunks == 0
+    assert third.cached_chunks == second.executed_chunks
+
+
 def test_sharded_workers_complete_one_store(tmp_path):
     spec = SweepSpec(name="workers", backends=("sim", "pallas"), **TINY)
     r0 = run_sweep(spec, str(tmp_path), num_shards=2, shard_index=0)

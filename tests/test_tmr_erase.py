@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from proptest import sweep
+from _proptest import sweep
 from repro.core import calibration as cal
 from repro.core.power import STANDARD_POWER_W, power_table, simra_power_w
 from repro.core.subarray import Subarray
