@@ -1,13 +1,14 @@
 """``repro.bench``: per-op vs fused Program execution harness.
 
-Times the same addressed :class:`~repro.pud.isa.Program` through
-``Backend.run`` (one kernel launch per MAJ/MRC op) and
-``Backend.run_fused`` (one launch per schedule dispatch group, see
-:mod:`repro.compile`) for the paper-motivated workloads — bit-serial
-adder / multiplier (§8.1) and the Multi-RowCopy secure-erase wave
-(§8.2) — and writes a machine-readable ``BENCH_fused.json`` so the perf
-trajectory of the fusion layer is recorded run over run (schema in
-``docs/BENCH.md``).
+Times the same addressed :class:`~repro.pud.isa.Program` through both
+execution paths of a :class:`~repro.session.DramSession` — per-op
+interpretation (``run``, one kernel launch per MAJ/MRC op) and
+compile-cached fused execution (``run_fused``, one launch per schedule
+dispatch group, see :mod:`repro.compile`) — for the paper-motivated
+workloads: bit-serial adder / multiplier (§8.1) and the Multi-RowCopy
+secure-erase wave (§8.2).  Results land in a machine-readable
+``BENCH_fused.json`` so the perf trajectory of the fusion layer is
+recorded run over run (schema in ``docs/BENCH.md``).
 
 Usage::
 
@@ -15,9 +16,12 @@ Usage::
     python -m benchmarks.bench                    # full sizes
     python -m benchmarks.bench --backends oracle pallas sim
 
-Every row carries both wall-clock timings and *structural* dispatch
-counts; the CI gate asserts on the latter (fused < per-op for the
-32-bit adder), which needs no timing stability.
+Every row carries wall-clock timings, *structural* dispatch counts
+(measured in a scoped ``count_dispatches`` window per run, so workloads
+never leak counts into each other), and the session compile-cache
+hits/misses of the fused path; the CI gate asserts on the structural
+columns (fused < per-op dispatches for the 32-bit adder, >= 1 cache
+hit), which needs no timing stability.
 """
 
 from __future__ import annotations
@@ -30,7 +34,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-SCHEMA = "repro-bench/fused-v1"
+SCHEMA = "repro-bench/fused-v2"
 DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "results",
                            "BENCH_fused.json")
 
@@ -103,43 +107,52 @@ def _workloads(smoke: bool):
 
 
 # ----------------------------------------------------------------- driver
-def _timed(fn, reps: int):
+def _timed(fn, session, reps: int):
+    """(wall_s per rep, final output, kernel launches per run).
+
+    The warm-up run (jit/pallas compile paths) executes inside its own
+    ``count_dispatches`` scope, so the launch count is exact for one
+    run — no dividing a shared counter across reps, no leakage from
+    whatever ran before.
+    """
     import jax
 
-    out = fn()           # warm-up: jit/pallas compile paths
-    jax.block_until_ready(out)
+    with session.count_dispatches() as scope:
+        out = fn()
+        jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn()
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps, out
+    return (time.perf_counter() - t0) / reps, out, scope.count
 
 
-def bench_program(name: str, prog, state, backend_names, reps: int):
+def bench_program(name: str, prog, state, sessions, ref, reps: int):
     import numpy as np
 
-    from repro.backends import ExecutionContext, get_backend
-    from repro.compile import build_schedule
-
-    sched = build_schedule(prog)
-    ideal = ExecutionContext(ideal=True)
-    want = np.asarray(get_backend("oracle", ideal).run(prog, state))
+    want = np.asarray(ref.run(prog, state))
     rows = []
-    for be_name in backend_names:
-        be = get_backend(be_name, ideal)
+    for be_name, sess in sessions.items():
         modes = {}
-        for mode, runner in (("per_op", be.run), ("fused", be.run_fused)):
-            be.reset_dispatches()
-            wall, out = _timed(lambda r=runner: r(prog, state), reps)
-            # counters accumulate over warm-up + reps: report per run
-            dispatches = be.dispatch_count // (reps + 1)
+        for mode, runner in (("per_op", sess.run),
+                             ("fused", sess.run_fused)):
+            if mode == "fused":  # per-op execution never touches the cache
+                cache0 = sess.cache.stats.snapshot()
+            wall, out, dispatches = _timed(
+                lambda r=runner: r(prog, state), sess, reps)
             modes[mode] = {"wall_s": wall, "dispatches": dispatches}
             modes[mode]["parity"] = bool((np.asarray(out) == want).all())
+            if mode == "fused":
+                d = sess.cache.stats.delta(cache0)
+                modes[mode]["cache"] = {"hits": d.hits,
+                                        "misses": d.misses}
+        # The fused warm-up built (and cached) the schedule; reading the
+        # level count back is a hit, never a second scheduling pass.
         rows.append({
             "name": name,
             "backend": be_name,
             "n_ops": len(prog.ops),
-            "n_levels": sched.n_levels,
+            "n_levels": sess.schedule_for(prog).n_levels,
             "per_op": modes["per_op"],
             "fused": modes["fused"],
             "speedup": modes["per_op"]["wall_s"]
@@ -165,17 +178,35 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     reps = args.reps or (1 if args.smoke else 3)
 
+    from repro.backends import ExecutionContext
+    from repro.session import DramSession
+
+    # One session per backend for the whole run: repeated programs hit
+    # the compile cache exactly as they would in a serving deployment.
+    ideal = ExecutionContext(ideal=True)
+    sessions = {n: DramSession(n, ideal, name=f"bench-{n}")
+                for n in args.backends}
+    ref = (sessions.get("oracle")
+           or DramSession("oracle", ideal, name="bench-oracle-ref"))
+
     rows = []
     for name, build in _workloads(args.smoke).items():
         prog, state = build()
         print(f"[bench] {name}: {len(prog.ops)} ops ...", flush=True)
-        rows.extend(bench_program(name, prog, state, args.backends, reps))
+        rows.extend(bench_program(name, prog, state, sessions, ref, reps))
 
+    hits = sum(s.cache.stats.hits for s in sessions.values())
+    misses = sum(s.cache.stats.misses for s in sessions.values())
     doc = {
         "schema": SCHEMA,
         "smoke": args.smoke,
         "reps": reps,
         "interpret": True,
+        "compile_cache": {
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
+        },
         "workloads": rows,
     }
     out_path = os.path.abspath(args.out)
@@ -194,6 +225,9 @@ def main(argv=None) -> int:
               f"/{r['fused']['dispatches']:5d} disp | "
               f"{r['speedup']:5.2f}x wall, "
               f"{r['dispatch_reduction']:5.1f}x dispatch{flag}")
+    cc = doc["compile_cache"]
+    print(f"[bench] compile cache: {cc['hits']} hits / {cc['misses']} "
+          f"misses ({cc['hit_rate']*100:.0f}% hit rate)")
     bad = [r for r in rows
            if not (r["per_op"]["parity"] and r["fused"]["parity"])]
     return 1 if bad else 0

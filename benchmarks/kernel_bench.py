@@ -1,5 +1,5 @@
-"""Kernel micro-benchmarks through the backend registry: the ``pallas``
-backend (interpret) vs the ``oracle`` reference on identical inputs,
+"""Kernel micro-benchmarks through the session API: a ``pallas``
+session (interpret) vs the ``oracle`` reference on identical inputs,
 plus the analytic TPU-side traffic model for each kernel.  Swapping the
 one-string backend name re-prices every row on a different executor."""
 
@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backends import ExecutionContext, get_backend
+from repro.backends import ExecutionContext
+from repro.session import DramSession
 
 #: One-string config choice: which executor the benchmark rows measure.
 BENCH_BACKEND = "pallas"
@@ -30,8 +31,8 @@ def _timeit(fn, reps=3):
 
 def kernel_benchmarks(backend: str = BENCH_BACKEND):
     ctx = ExecutionContext()
-    be = get_backend(backend, ctx)
-    ref = get_backend(REF_BACKEND, ctx)
+    be = DramSession(backend, ctx)
+    ref = DramSession(REF_BACKEND, ctx)
     rng = np.random.default_rng(0)
     rows = []
 

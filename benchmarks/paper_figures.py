@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backends import get_backend
+from repro.session import DramSession
 from repro.core import calibration as cal
 from repro.core import chargeshare as cs
 from repro.core import power as pw
@@ -185,7 +185,7 @@ def _microbench_time_ns(op: str, mfr: str, tier: int) -> float:
     b = np.maximum(rng.integers(0, 2**32, 8, dtype=np.uint32), 1)
     n_act = 4 if tier == 3 else 32
     # Programs are backend-invariant; the oracle is the cheapest compiler.
-    _, prog = get_backend("oracle").elementwise(op, a, b, tier=tier,
+    _, prog = DramSession("oracle").elementwise(op, a, b, tier=tier,
                                                 n_act=n_act)
     bg = cal.MAJX_BEST_GROUP_SUCCESS[mfr]
     bg3_baseline = cal.MAJ3_4ROW_BEST_GROUP_SUCCESS[mfr]

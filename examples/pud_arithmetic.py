@@ -13,8 +13,8 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.paper_figures import _microbench_time_ns
-from repro.backends import get_backend
 from repro.core import calibration as cal
+from repro.session import DramSession
 
 #: one-string backend choice ("oracle" compiles/computes the programs;
 #: swap for "pallas" or "sim" to execute the same gates elsewhere).
@@ -25,7 +25,7 @@ def main():
     rng = np.random.default_rng(0)
     a = rng.integers(0, 2**32, 32, dtype=np.uint32)
     b = np.maximum(rng.integers(0, 2**32, 32, dtype=np.uint32), 1)
-    backend = get_backend(BACKEND)
+    backend = DramSession(BACKEND)
 
     print("op   tier  DRAM-ops   exact   modeled-us")
     for op in cal.MICROBENCHMARKS:

@@ -1,7 +1,9 @@
-"""Quickstart: the paper's PUD operations through the backend registry.
+"""Quickstart: the paper's PUD operations through `repro.session`.
 
-One :class:`Program` / op set, three interchangeable executors behind
-``get_backend(name)`` — the paper's central point, as an API:
+One typed :class:`DramSession` per executor — the session owns the
+backend + `ExecutionContext`, hands out validated row handles, lowers
+programs through `repro.compile` automatically, and caches fused
+schedules by program content:
 
   * ``oracle``  pure bitwise reference (ground truth),
   * ``sim``     behavioural DRAM model with the calibrated error surfaces,
@@ -12,9 +14,11 @@ Runs in ~30s on CPU:
   2. MAJ5 with input replication on every backend — identical results
      when ideal, paper-calibrated success rates when not (Obs 10),
   3. Multi-RowCopy 1 -> 31 parity across backends,
-  4. an addressed PUD Program executed by all three backends + its
-     latency/energy under the calibrated model,
-  5. majority-based 32-bit addition compiled once, executed per backend.
+  4. a typed session program (row handles, build-time validation)
+     executed by all three backends + its latency/energy under the
+     calibrated model — and what a bad row address looks like,
+  5. majority-based 32-bit addition per session, showing the compile
+     cache turning a repeated program into a schedule-cache hit.
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -22,10 +26,10 @@ Usage:  PYTHONPATH=src python examples/quickstart.py
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backends import ExecutionContext, available_backends, get_backend
+from repro.backends import ExecutionContext, available_backends
 from repro.core import calibration as cal
 from repro.core.errormodel import ErrorModel
-from repro.pud.isa import Program
+from repro.session import DramSession, SessionError
 
 BACKENDS = ("oracle", "sim", "pallas")
 
@@ -33,6 +37,7 @@ BACKENDS = ("oracle", "sim", "pallas")
 def main():
     rng = np.random.default_rng(0)
     ideal = ExecutionContext(ideal=True)
+    sessions = {n: DramSession(n, ideal) for n in BACKENDS}
 
     # 1) simultaneous many-row activation -------------------------------
     em = ErrorModel("H")
@@ -42,13 +47,13 @@ def main():
 
     # 2) MAJ5 with input replication across backends ---------------------
     planes = jnp.asarray(rng.integers(0, 2**32, (5, 32), dtype=np.uint32))
-    want = get_backend("oracle").majx(planes)
+    want = sessions["oracle"].majx(planes)
     print(f"\n== MAJ5 on every backend (registry: {available_backends()}) ==")
-    for name in BACKENDS:
-        got = get_backend(name, ideal).majx(planes, n_act=32)
+    for name, sess in sessions.items():
+        got = sess.majx(planes, n_act=32)
         print(f"  {name:7s} (ideal): bit-exact={bool((got == want).all())}")
     for n_act in (8, 32):
-        sim = get_backend("sim", ExecutionContext(seed=1))
+        sim = DramSession("sim", ExecutionContext(seed=1))
         acc = sim.success_rate(sim.majx(planes, n_act=n_act), want)
         print(f"  sim MAJ5 @ {n_act:2d}-row activation: measured "
               f"{acc*100:.1f}% (model {em.majx_success(5, n_act)*100:.1f}%, "
@@ -56,34 +61,44 @@ def main():
 
     # 3) Multi-RowCopy ----------------------------------------------------
     src = jnp.asarray(rng.integers(0, 2**32, (32,), dtype=np.uint32))
-    copies = {n: get_backend(n, ideal).rowcopy(src, 31) for n in BACKENDS}
+    copies = {n: s.rowcopy(src, 31) for n, s in sessions.items()}
     ok = all(bool((c == src).all()) for c in copies.values())
     print(f"\n== Multi-RowCopy 1 -> 31 on all backends, bit-exact={ok} ==")
 
-    # 4) one addressed Program, three executors ---------------------------
-    prog = Program()
-    prog.emit("MAJ", x=3, n_act=4, srcs=(0, 1, 2), dsts=(3,))
-    prog.emit("NOT", srcs=(3,), dsts=(4,))
-    prog.emit("MRC", n_act=8, srcs=(4,), dsts=tuple(range(5, 12)))
-    state = jnp.asarray(rng.integers(0, 2**32, (12, 8), dtype=np.uint32))
-    finals = [np.asarray(get_backend(n, ideal).run(prog, state))
-              for n in BACKENDS]
+    # 4) one typed session program, three executors -----------------------
+    b = sessions["oracle"].program(rows=12, name="quickstart-demo")
+    ops = b.input(rng.integers(0, 2**32, (3, 8), dtype=np.uint32))
+    vote = b.maj(ops[0], ops[1], ops[2], n_act=4, tag="demo/vote")
+    flip = b.not_(vote, tag="demo/flip")
+    b.mrc(flip, 7, tag="demo/fanout")
+    prog, state = b.build(), b.initial_state()
+    finals = [np.asarray(s.run_fused(prog, state))
+              for s in sessions.values()]
     agree = all((f == finals[0]).all() for f in finals)
-    print(f"\n== Program({len(prog.ops)} ops) via "
+    print(f"\n== typed Program({len(prog.ops)} ops) via "
           f"{'/'.join(BACKENDS)}: states agree={agree}; "
           f"{prog.latency_ns(em):.0f} ns / {prog.energy_nj(em):.0f} nJ "
           f"modeled ==")
+    try:  # the allocator catches bad programs before any kernel runs
+        b.mrc(flip, b.alloc_rows(7))
+    except SessionError as e:
+        print(f"  build-time validation: {e}")
 
-    # 5) majority-based arithmetic (§8.1), compiled per backend ----------
+    # 5) majority-based arithmetic (§8.1), compile-cached per session ----
     a = rng.integers(0, 2**32, 64, dtype=np.uint32)
-    b = rng.integers(0, 2**32, 64, dtype=np.uint32)
-    for name in BACKENDS:
-        out, prog = get_backend(name, ideal).elementwise(
-            "add", a, b, tier=5, n_act=32)
-        assert (np.asarray(out) == (a + b).astype(np.uint32)).all(), name
+    c = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    print()
+    for name, sess in sessions.items():
+        out, prog = sess.elementwise("add", a, c, tier=5, n_act=32)
+        if sess.capabilities().native_batch:
+            # repeat the fused path: the schedule comes from the cache
+            out, prog = sess.elementwise("add", a, c, tier=5, n_act=32)
+        assert (np.asarray(out) == (a + c).astype(np.uint32)).all(), name
         lat_us = prog.latency_ns(em, pipelined=True, best_group=True) / 1e3
+        stats = sess.cache.stats
         print(f"  32-bit ADD via {name:7s}: {len(prog.ops)} DRAM ops, "
-              f"{lat_us:.1f} us modeled, bit-exact vs numpy")
+              f"{lat_us:.1f} us modeled, bit-exact vs numpy; compile "
+              f"cache {stats.hits} hits / {stats.misses} misses")
 
     print("\nquickstart OK")
 

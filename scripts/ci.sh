@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + backend-parity smoke + sweep smoke + docs check.
+# CI entry point: tier-1 suite + sweep/bench/quickstart smokes + docs check
+# + backend-parity smoke.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,7 +26,7 @@ PYTHONPATH=src python - "$BENCH_CI_ROOT/BENCH_fused.json" <<'PY'
 import json, sys
 
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == "repro-bench/fused-v1", doc["schema"]
+assert doc["schema"] == "repro-bench/fused-v2", doc["schema"]
 rows = {(r["name"], r["backend"]): r for r in doc["workloads"]}
 assert len({n for n, _ in rows}) >= 3, sorted(rows)
 add = rows[("add32", "pallas")]
@@ -35,15 +36,25 @@ assert add["fused"]["dispatches"] < add["per_op"]["dispatches"], add
 assert add["fused"]["dispatches"] <= add["n_levels"], add
 assert all(r["per_op"]["parity"] and r["fused"]["parity"]
            for r in doc["workloads"])
+# Session compile cache: repeated programs must re-use their schedule.
+cc = doc["compile_cache"]
+assert cc["hits"] >= 1, cc
 print(f"bench gate OK: add32 fused {add['fused']['dispatches']} vs "
       f"per-op {add['per_op']['dispatches']} dispatches "
-      f"({add['n_levels']} levels)")
+      f"({add['n_levels']} levels); compile cache {cc['hits']} hits / "
+      f"{cc['misses']} misses")
 PY
 rm -rf "$BENCH_CI_ROOT"
 
 echo "== docs check (module paths in docs/*.md resolve) =="
 python scripts/check_docs.py
 
+echo "== quickstart smoke (session API end-to-end) =="
+PYTHONPATH=src python examples/quickstart.py
+
+# This smoke deliberately exercises the raw registry (get_backend), the
+# compat layer under repro.session — it is the one place outside tests
+# that should keep doing so.
 echo "== backend-parity smoke (oracle / sim / pallas) =="
 PYTHONPATH=src python - <<'PY'
 import numpy as np

@@ -10,11 +10,15 @@ One :class:`~repro.pud.isa.Program`, three interchangeable executors:
 
 Every backend takes the same :class:`ExecutionContext` (calibration
 point, timings, temperature/voltage, interpret/tiling flags), so a
-backend is a one-string config choice everywhere — examples,
-benchmarks, the serving engine's PUD hooks, and the offload planner all
-resolve their executor here.  New executors (multi-device sharded sim,
-compiled-TPU) register with :func:`register_backend` and inherit every
-consumer for free.
+backend is a one-string config choice everywhere.  New executors
+(multi-device sharded sim, compiled-TPU) register with
+:func:`register_backend` and inherit every consumer for free.
+
+This registry is the **compat layer**: consumers execute through
+:class:`repro.session.DramSession` (typed row allocation, build-time
+validation, compile-cached fused execution), which resolves its backend
+here via :func:`resolve_backend`.  Reach for :func:`get_backend`
+directly only when implementing backend-layer machinery or tests.
 """
 
 from __future__ import annotations
@@ -53,6 +57,25 @@ def get_backend(name: str, ctx: Optional[ExecutionContext] = None) -> Backend:
     return cls(ctx)
 
 
+def resolve_backend(backend: "str | Backend",
+                    ctx: Optional[ExecutionContext] = None) -> Backend:
+    """Name -> registry lookup; instance -> passed through unchanged.
+
+    The session layer's resolution hook: ``DramSession("sim", ctx)``
+    and ``DramSession(prebuilt_backend)`` both land here.  A ``ctx``
+    alongside an already-constructed instance must match the instance's
+    own context (a backend is constructed *under* its context; silently
+    swapping would change semantics mid-flight).
+    """
+    if isinstance(backend, Backend):
+        if ctx is not None and ctx != backend.ctx:
+            raise ValueError(
+                f"backend instance {backend.name!r} already carries an "
+                f"ExecutionContext; pass ctx only when resolving by name")
+        return backend
+    return get_backend(backend, ctx)
+
+
 # Register the three shipped implementations.
 from repro.backends.oracle import OracleBackend  # noqa: E402
 from repro.backends.pallas import PallasBackend  # noqa: E402
@@ -65,4 +88,5 @@ register_backend("pallas")(PallasBackend)
 __all__ = [
     "Backend", "Capabilities", "ExecutionContext", "Timings",
     "available_backends", "get_backend", "register_backend",
+    "resolve_backend",
 ]

@@ -19,15 +19,18 @@ interface:
 All knobs live in one shared :class:`~repro.backends.context.ExecutionContext`.
 Implementations: ``oracle`` (pure bitwise reference), ``sim``
 (behavioural subarray with calibrated error injection), ``pallas``
-(bulk TPU kernels).  Consumers pick one with
-:func:`repro.backends.get_backend` — a backend is a one-string config
+(bulk TPU kernels).  Consumers name one backend and execute through a
+:class:`repro.session.DramSession` — a backend is a one-string config
 choice, which is what makes regime comparisons (PULSAR/FCDRAM-style
-reliability-vs-throughput tradeoffs) apples-to-apples.
+reliability-vs-throughput tradeoffs) apples-to-apples; the session adds
+typed row allocation, build-time validation, and schedule caching on
+top of this protocol.
 """
 
 from __future__ import annotations
 
 import abc
+import contextlib
 import dataclasses
 from typing import Optional, Sequence
 
@@ -36,6 +39,28 @@ import jax.numpy as jnp
 
 from repro.backends.context import ExecutionContext
 from repro.pud.isa import Program
+
+
+class DispatchScope:
+    """A window over a backend's kernel-launch counter.
+
+    Produced by :meth:`Backend.count_dispatches`: ``.count`` is the
+    launches issued since the scope opened, frozen when the ``with``
+    block exits — so two workloads (bench rows, tests) each read their
+    own window of the monotonic counter instead of sharing one mutable
+    total that leaks across resets.
+    """
+
+    def __init__(self, backend: "Backend"):
+        self._backend = backend
+        self._start = backend.dispatch_count
+        self._stop: Optional[int] = None
+
+    @property
+    def count(self) -> int:
+        end = (self._backend.dispatch_count if self._stop is None
+               else self._stop)
+        return end - self._start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +118,32 @@ class Backend(abc.ABC):
         self.dispatch_count = 0
 
     def reset_dispatches(self) -> None:
+        """Zero the process-lifetime counter.
+
+        Prefer :meth:`count_dispatches` for measurement — resetting a
+        shared counter inside someone else's measurement window corrupts
+        their count; a scope never does.
+        """
         self.dispatch_count = 0
+
+    @contextlib.contextmanager
+    def count_dispatches(self):
+        """Scoped kernel-launch counting.
+
+        Yields a :class:`DispatchScope` whose ``.count`` is the
+        launches issued inside the ``with`` block (frozen at exit).
+        Scopes nest and sequence independently, so concurrent bench
+        workloads and tests cannot leak counts into each other.
+
+        >>> with backend.count_dispatches() as scope:
+        ...     backend.run_fused(program, state)
+        >>> scope.count                # launches of that run alone
+        """
+        scope = DispatchScope(self)
+        try:
+            yield scope
+        finally:
+            scope._stop = self.dispatch_count
 
     # ------------------------------------------------------------ protocol
     @abc.abstractmethod
@@ -159,7 +209,8 @@ class Backend(abc.ABC):
             state = self._exec_op(op, state)
         return state
 
-    def run_fused(self, program: Program, state: jax.Array) -> jax.Array:
+    def run_fused(self, program: Program, state: jax.Array, *,
+                  sched=None) -> jax.Array:
         """Execute an addressed Program through the fusion scheduler.
 
         Semantically identical to :meth:`run` (verified adversarially in
@@ -168,6 +219,11 @@ class Backend(abc.ABC):
         keep their exact command-level semantics; backends with native
         batch dispatch (``pallas``) override this with level-batched
         kernel launches (see :mod:`repro.compile.schedule`).
+
+        ``sched`` optionally supplies the program's prebuilt
+        :class:`~repro.compile.schedule.Schedule` — how the session
+        layer's compile cache skips re-scheduling on repeated programs.
+        Backends that interpret per-op ignore it.
         """
         return self.run(program, state)
 

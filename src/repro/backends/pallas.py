@@ -81,18 +81,22 @@ class PallasBackend(Backend):
         return bitserial_add(a, b, interpret=self.ctx.interpret)
 
     # ------------------------------------------------- fused program path
-    def run_fused(self, program: Program, state: jax.Array) -> jax.Array:
+    def run_fused(self, program: Program, state: jax.Array, *,
+                  sched=None) -> jax.Array:
         """Level-batched program execution (see module docstring).
 
         Reads sample the level-entry state and writes commit at level
         exit, matching the hazard model the scheduler levels against;
         WAW leveling guarantees the per-level scatters hit disjoint
-        rows.
+        rows.  A prebuilt ``sched`` (the session compile cache) skips
+        the scheduling pass entirely.
         """
         from repro.compile.schedule import build_schedule
 
+        if sched is None:
+            sched = build_schedule(program)
         state = jnp.asarray(state, jnp.uint32)
-        for level in build_schedule(program).levels:
+        for level in sched.levels:
             entry = state
             for group in level:
                 state = self._exec_group(group, entry, state)

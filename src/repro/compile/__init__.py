@@ -15,7 +15,10 @@ Consumers: the ``pallas`` backend executes schedules, ``pud.arith``
 routes batch-native executors through :func:`compile_elementwise`, the
 sweep runner fuses characterization chunks, the serve engine's integrity
 vote is one fused program, and ``pud.offload`` prices dispatch-count
-reductions.  See docs/ARCHITECTURE.md ("Program compilation & fusion").
+reductions.  :class:`repro.session.DramSession` is the layer above:
+it memoizes :func:`build_schedule` by program content, so repeated
+programs skip straight to fused execution.  See docs/ARCHITECTURE.md
+("Program compilation & fusion" and "Session layer").
 """
 
 from repro.compile.schedule import (FusedGroup, Schedule, build_schedule,

@@ -267,8 +267,10 @@ def run_elementwise(op: str, a, b, tier: int = 3, n_act: int = 4,
 
     Returns (uint32 results, recorded Program).  ``a``/``b`` may be any
     shape; they are flattened into bit-serial lanes.  ``executor``
-    selects where each recorded gate computes (default: logical oracle);
-    see :class:`GateExecutor` / :mod:`repro.backends`.
+    selects where each recorded gate computes (default: logical oracle):
+    a backend, or — the session-API entry point — a
+    :class:`repro.session.DramSession` (what
+    ``DramSession.elementwise`` passes).
 
     Executors with native batch dispatch (``pallas``) take the *fused*
     path: the gate stream is first lowered to an addressed Program
@@ -276,7 +278,10 @@ def run_elementwise(op: str, a, b, tier: int = 3, n_act: int = 4,
     level-batched kernel dispatches via ``executor.run_fused`` — the
     values still come from that executor's kernels, and the returned
     Program additionally carries row addresses (same op histogram as the
-    per-gate recording).
+    per-gate recording).  When the executor is a session, that
+    ``run_fused`` resolves through its content-hashed compile cache, so
+    re-running a traced program (same op/tier/width) skips
+    re-scheduling.
     """
     caps = getattr(executor, "capabilities", None)
     if caps is not None and executor.capabilities().native_batch:

@@ -123,19 +123,23 @@ def tpu_program_ns(program, row_bytes: int, *, fused: bool = True,
 
 def plan_program(program, row_bytes: int,
                  errors: Optional[ErrorModel] = None,
-                 ctx: Optional[ExecutionContext] = None) -> OffloadDecision:
+                 ctx: Optional[ExecutionContext] = None,
+                 sched=None) -> OffloadDecision:
     """Where should a whole addressed Program run?
 
     Prices the PUD side with the program's retry-aware command schedule
     (:meth:`repro.pud.isa.Program.latency_ns`) and the TPU side with the
     *fused* dispatch count, so the decision reflects the executor the
-    ``pallas`` backend actually uses.  Consumers: the serve engine's
-    integrity-vote hook records one decision per healed program.
+    ``pallas`` backend actually uses.  Pass a prebuilt ``sched`` (e.g.
+    ``DramSession.schedule_for``'s cached one) to avoid re-leveling the
+    program.  Consumers: the serve engine's integrity-vote hook records
+    one decision per healed program.
     """
     from repro.compile.schedule import build_schedule
 
     ctx, errors = _resolve(ctx, errors)
-    sched = build_schedule(program)
+    if sched is None:
+        sched = build_schedule(program)
     tpu = tpu_program_ns(program, row_bytes, fused=True, sched=sched)
     pud = program.latency_ns(errors, **ctx.env())
     winner = "pud" if pud < tpu else "tpu"

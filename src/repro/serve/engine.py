@@ -5,11 +5,13 @@ and queued requests are prefilled into it (continuous batching a la Orca /
 vLLM).  Greedy or temperature sampling.  All model math lives in
 repro.models.model; the engine is pure scheduling.
 
-PUD hooks: the engine can carry a PUD execution backend (one-string
-choice from :mod:`repro.backends`) for in-memory integrity work — a
+PUD hooks: the engine carries a :class:`~repro.session.DramSession`
+(backend is still a one-string choice) for in-memory integrity work — a
 majority vote healing silent corruption across parameter replicas before
 they serve traffic, with the offload planner recording where the vote
 *would* run on PUD-capable memory (advisory on TPU-only deployments).
+The session's compile cache makes repeated votes (every heal after the
+first with the same parameter shapes) skip re-scheduling entirely.
 """
 
 from __future__ import annotations
@@ -21,10 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.backends import ExecutionContext, get_backend
+from repro.backends import ExecutionContext
 from repro.configs.base import ModelConfig
 from repro.core import bitplanes as bp
 from repro.models import model as M
+from repro.session import DramSession
 
 
 @dataclasses.dataclass
@@ -53,8 +56,9 @@ class Engine:
         # so a stochastic backend ("sim") can't corrupt params it claims
         # to heal.  Pass a non-ideal pud_ctx explicitly only for fidelity
         # studies, never for a serving deployment.
-        self.pud = get_backend(pud_backend,
-                               pud_ctx or ExecutionContext(ideal=True))
+        self.pud = DramSession(pud_backend,
+                               pud_ctx or ExecutionContext(ideal=True),
+                               name="serve-pud")
         self.pud_decisions: list = []
         self._decode = jax.jit(
             lambda p, t, c: M.decode(p, t, c, cfg))
@@ -69,19 +73,20 @@ class Engine:
         Installs the healed params and returns the number of corrected
         bits.
 
-        The whole vote is ONE addressed Program: every leaf's packed
-        words are concatenated per replica and tiled into subarray rows,
-        one MAJ op per row-image, and the program runs through
-        ``self.pud.run_fused`` — a single-level schedule the ``pallas``
-        backend executes as one batched MAJX dispatch (vs one dispatch
-        per parameter leaf before fusion).  The offload planner's
+        The whole vote is ONE addressed Program, built through the
+        session's typed builder: every leaf's packed words are
+        concatenated per replica and bound as input row groups, one MAJ
+        op per row-image votes into an output group, and the program
+        runs compile-cached through ``self.pud.run_fused`` — a
+        single-level schedule the ``pallas`` backend executes as one
+        batched MAJX dispatch, with repeat votes over the same shapes
+        hitting the session's schedule cache.  The offload planner's
         verdict for the fused program is appended to
         ``self.pud_decisions`` (advisory: where the vote would run on
         PUD-capable memory).
         """
         from repro.core import calibration as cal
         from repro.kernels import tiling
-        from repro.pud.isa import Program
         from repro.pud.offload import plan_program
 
         x = len(replicas)
@@ -104,16 +109,17 @@ class Engine:
         # One MAJ op per row-image; all ops are level 0 -> one dispatch.
         # Votes issue at the full 32-row activation (the §5 replication
         # ladder's best success rate — the same point plan_vote prices).
-        prog = Program()
+        b = self.pud.program(rows=(x + 1) * n_rows, name="heal-vote")
+        groups = [b.input(tile, tag=f"heal/replica[{rep}]")
+                  for rep, tile in enumerate(tiles)]
+        out = b.alloc_rows(n_rows, tag="heal/voted")
         n_act = max(cal.N_ACT_LEVELS)
         for r in range(n_rows):
-            prog.emit("MAJ", x=x, n_act=n_act, tag=f"heal/row[{r}]",
-                      srcs=tuple(rep * n_rows + r for rep in range(x)),
-                      dsts=(x * n_rows + r,))
-        state = jnp.concatenate(
-            tiles + [jnp.zeros((n_rows, width), jnp.uint32)])
-        final = self.pud.run_fused(prog, state)
-        voted = final[x * n_rows:].reshape(-1)[:total]
+            b.maj(*(g[r] for g in groups), dst=out[r], n_act=n_act,
+                  tag=f"heal/row[{r}]")
+        prog = b.build()
+        final = self.pud.run_fused(prog, b.initial_state())
+        voted = final[np.asarray(out.indices)].reshape(-1)[:total]
         fixed_bits = int(self.pud.mismatch(rep_words[0], voted))
 
         healed_leaves, off = [], 0
@@ -122,8 +128,11 @@ class Engine:
                 voted[off:off + n_words], shape, dtype))
             off += n_words
         self.params = jax.tree.unflatten(treedef, healed_leaves)
+        # The planner prices the same schedule the session just executed
+        # (a cache hit, not a re-leveling).
         self.pud_decisions.append(
-            plan_program(prog, width * 4, ctx=self.pud.ctx))
+            plan_program(prog, width * 4, ctx=self.pud.ctx,
+                         sched=self.pud.schedule_for(prog)))
         return fixed_bits
 
     def verify_params(self, reference) -> float:

@@ -1,0 +1,95 @@
+"""Content-hashed compile cache: schedule a Program once, run it forever.
+
+Fused execution pays a host-side compile step per program —
+:func:`repro.compile.schedule.build_schedule` levels the op stream and
+groups each level's dispatches.  The workloads that matter repeat the
+*same* program many times (serve ``heal_params`` votes every epoch,
+sweep chunks share one chunk shape, ``pud.arith`` executors re-run a
+traced adder per batch), so :class:`CompileCache` memoizes schedules by
+program *content*: a SHA-256 over every op's semantic fields — kind,
+arity, activation count, row addresses — deliberately excluding the
+provenance ``tag``, which executors never read.  Two sweep chunks whose
+ops differ only in point-index tags therefore share one schedule.
+
+A :class:`~repro.compile.schedule.Schedule` is a pure function of that
+content (frozen dataclasses, no backend state), so one cache can be
+shared across sessions — the sweep runner shares a process-wide cache
+across its per-chunk sessions.  ``stats`` records hits/misses; the
+bench harness reports the hit rate in ``BENCH_fused.json``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import Optional
+
+from repro.compile.schedule import Schedule, build_schedule
+from repro.pud.isa import Program
+
+
+def program_key(program: Program) -> str:
+    """Content hash of a Program's semantic fields (tags excluded)."""
+    h = hashlib.sha256()
+    for op in program.ops:
+        h.update(
+            f"{op.kind}|{op.x}|{op.n_act}|{op.srcs}|{op.dsts}\n".encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss counters, comparable across snapshots for windowing."""
+
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+    def delta(self, earlier: "CacheStats") -> "CacheStats":
+        """Stats accumulated since an ``earlier`` :meth:`snapshot`."""
+        return CacheStats(hits=self.hits - earlier.hits,
+                          misses=self.misses - earlier.misses)
+
+
+class CompileCache:
+    """LRU cache: ``program_key`` -> built :class:`Schedule`."""
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self.stats = CacheStats()
+        self._entries: collections.OrderedDict[str, Schedule] = \
+            collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def schedule_for(self, program: Program,
+                     key: Optional[str] = None) -> Schedule:
+        """The program's schedule — cached, or built and admitted.
+
+        Pass a precomputed ``key`` (from :func:`program_key`) to skip
+        re-hashing when the caller already derived it.
+        """
+        key = key or program_key(program)
+        sched = self._entries.get(key)
+        if sched is not None:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return sched
+        self.stats.misses += 1
+        sched = build_schedule(program)
+        self._entries[key] = sched
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+        return sched

@@ -1,0 +1,114 @@
+"""Typed subarray row handles: allocation as an API, not an integer.
+
+The paper's programs are *compositions over subarray rows* — MAJX reads
+X operand rows, Multi-RowCopy fans one row out to N destinations, the
+§8.1 bit-serial programs stream through dozens of scratch rows.  Hand
+-assembled integer addresses fail late (a bad index scatters into the
+wrong row inside a kernel, bit-exactness silently breaks); this module
+makes rows *handles* handed out by an allocator, so range and aliasing
+mistakes are caught when the program is built, with the subarray context
+in the message.
+
+:class:`Row` is one subarray row; :class:`PlaneGroup` an ordered group
+of rows (operand planes of a MAJX stack, destinations of a Multi-RowCopy
+fan-out).  Handles remember their allocator, so an op that mixes rows
+from two different programs is rejected instead of aliasing by index
+coincidence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+
+class SessionError(ValueError):
+    """Base error of the session layer (build-time, never kernel-side)."""
+
+
+class RowAllocationError(SessionError):
+    """Subarray row budget exceeded at allocation time."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Row:
+    """A handle to one subarray row.
+
+    ``index`` is the row address an executing backend sees; ``tag`` is
+    provenance for error messages and recorded ops.  Handles compare by
+    (index, tag) but belong to exactly one allocator — ops validate
+    ownership so handles never alias across programs.
+    """
+
+    index: int
+    tag: str = ""
+    allocator: Optional["RowAllocator"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneGroup:
+    """An ordered group of :class:`Row` handles.
+
+    What MAJX operand stacks, Multi-RowCopy destination fans, and
+    bound input tiles are made of.  Indexing returns a :class:`Row`
+    (or a sub-:class:`PlaneGroup` for slices).
+    """
+
+    rows: tuple[Row, ...]
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self) -> Iterator[Row]:
+        return iter(self.rows)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return PlaneGroup(self.rows[i])
+        return self.rows[i]
+
+    @property
+    def indices(self) -> tuple[int, ...]:
+        return tuple(r.index for r in self.rows)
+
+
+class RowAllocator:
+    """Bump allocator over one subarray image's row space.
+
+    ``capacity=None`` is unbounded (the executing image is sized by
+    :meth:`n_rows` at build time); with a capacity, exceeding the row
+    budget raises :class:`RowAllocationError` naming the subarray and
+    the rows in use — the build-time analogue of running off the end of
+    a physical subarray.
+    """
+
+    def __init__(self, capacity: Optional[int] = None,
+                 name: str = "subarray"):
+        self.capacity = capacity
+        self.name = name
+        self._next = 0
+
+    @property
+    def n_rows(self) -> int:
+        """Rows handed out so far == the executing image's row count."""
+        return self._next
+
+    def alloc_row(self, tag: str = "") -> Row:
+        return self.alloc(1, tag=tag)[0]
+
+    def alloc(self, n: int, tag: str = "") -> PlaneGroup:
+        if n < 1:
+            raise RowAllocationError(
+                f"{self.name}: cannot allocate {n} rows (tag {tag!r})")
+        if self.capacity is not None and self._next + n > self.capacity:
+            raise RowAllocationError(
+                f"{self.name}: out of rows allocating {n} more "
+                f"(tag {tag!r}): {self._next}/{self.capacity} in use")
+        rows = tuple(Row(self._next + i, tag=tag, allocator=self)
+                     for i in range(n))
+        self._next += n
+        return PlaneGroup(rows)
+
+    def owns(self, row: Row) -> bool:
+        return isinstance(row, Row) and row.allocator is self

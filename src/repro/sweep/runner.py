@@ -6,10 +6,11 @@ Execution model:
   are skipped (resume); the remainder is optionally partitioned across
   workers with ``num_shards`` / ``shard_index`` (disjoint by
   construction, see :func:`repro.sweep.planner.shard`);
-* a chunk whose backend reports ``native_batch`` (``pallas``) lowers to
-  an addressed single-level Program and executes through
-  ``Backend.run_fused`` as one batched kernel dispatch (the
-  :mod:`repro.compile` fusion engine); when a device mesh is supplied
+* chunks execute through per-regime :class:`~repro.session.DramSession`
+  instances; a chunk whose backend reports ``native_batch`` (``pallas``)
+  lowers to an addressed single-level Program and executes through the
+  session's compile-cached ``run_fused`` as one batched kernel dispatch
+  (same-shaped chunks share one schedule); when a device mesh is supplied
   the stacked ``(B, X, R, C)`` batch instead goes through the vmapped
   ``majx_batch`` path placed with
   :func:`repro.dist.sharding.sharding_for` over the mesh's data axis,
@@ -32,8 +33,9 @@ from typing import Optional
 
 import numpy as np
 
-from repro.backends import Backend, ExecutionContext, Timings, get_backend
+from repro.backends import ExecutionContext, Timings
 from repro.core.errormodel import ErrorModel
+from repro.session import CompileCache, DramSession
 from repro.sweep import planner
 from repro.sweep.spec import ANALYTIC, GridPoint, SweepSpec
 from repro.sweep.store import RecordStore, default_root
@@ -133,34 +135,40 @@ class SweepResult:
 class _Executor:
     """Measurement engine for one sweep.
 
-    Backend instances are cached *per chunk* (see :meth:`execute`):
-    a chunk's records must be a pure function of (spec, chunk) so that
-    kill/resume and worker sharding — which change *which process*
-    executes a chunk, and in what order — can never change measured
-    values.  A process-lifetime cache would leak mutable backend state
-    (e.g. the ``sim`` backend's round-robin subarray cursor) across
-    chunks and break that guarantee.
+    Sessions (and the backend instances under them) are cached *per
+    chunk* (see :meth:`execute`): a chunk's records must be a pure
+    function of (spec, chunk) so that kill/resume and worker sharding —
+    which change *which process* executes a chunk, and in what order —
+    can never change measured values.  A process-lifetime cache would
+    leak mutable backend state (e.g. the ``sim`` backend's round-robin
+    subarray cursor) across chunks and break that guarantee.  The
+    *compile* cache is the exception and is deliberately process-wide:
+    a schedule is a pure function of program content, so same-shaped
+    chunks across the whole campaign share one fused schedule.
     """
 
     def __init__(self, spec: SweepSpec, mesh=None):
         self.spec = spec
         self.mesh = mesh
-        self._backends: dict[tuple, Backend] = {}
-        self._oracle = get_backend("oracle")
+        self._sessions: dict[tuple, DramSession] = {}
+        self._compile_cache = CompileCache()
+        self._oracle = DramSession("oracle", name="sweep-oracle")
 
-    def backend(self, p: GridPoint) -> Backend:
+    def session(self, p: GridPoint) -> DramSession:
         ctx = _context(self.spec, p)
         key = (p.backend, ctx)
-        if key not in self._backends:
-            self._backends[key] = get_backend(p.backend, ctx)
-        return self._backends[key]
+        if key not in self._sessions:
+            self._sessions[key] = DramSession(
+                p.backend, ctx, cache=self._compile_cache,
+                name=f"sweep-{p.backend}")
+        return self._sessions[key]
 
     # ---------------------------------------------------------- per point
     def _measure_majx(self, p: GridPoint) -> dict:
         shape = (p.x, self.spec.rows, self.spec.words)
         planes = _planes(p.pattern, shape, _rng(self.spec, p))
         want = np.asarray(self._oracle.majx(planes))
-        got = self.backend(p).majx(planes, x=p.x, n_act=p.n_act)
+        got = self.session(p).majx(planes, x=p.x, n_act=p.n_act)
         success, n_bits = _success(got, want)
         return dict(p.record_base(), success=success,
                     expected=_expected(p), n_bits=n_bits)
@@ -168,7 +176,7 @@ class _Executor:
     def _measure_mrc(self, p: GridPoint) -> dict:
         src = _planes(p.pattern, (self.spec.words,), _rng(self.spec, p))
         want = np.asarray(self._oracle.rowcopy(src, p.n_dest))
-        got = self.backend(p).rowcopy(src, p.n_dest)
+        got = self.session(p).rowcopy(src, p.n_dest)
         success, n_bits = _success(got, want)
         return dict(p.record_base(), success=success,
                     expected=_expected(p), n_bits=n_bits)
@@ -183,10 +191,12 @@ class _Executor:
 
         The chunk lowers to an addressed single-level Program
         (:func:`repro.sweep.planner.fused_majx_program`) executed via
-        ``run_fused`` — the same fusion engine the §8.1 programs use.
-        Under a device mesh the stacked batch instead goes through the
-        sharded ``majx_batch`` path, which places the B grid points
-        across local devices (still one vmapped dispatch).
+        the session's compile-cached ``run_fused`` — the same fusion
+        engine the §8.1 programs use, and every same-shaped chunk after
+        the first is a schedule-cache hit.  Under a device mesh the
+        stacked batch instead goes through the sharded ``majx_batch``
+        path, which places the B grid points across local devices
+        (still one vmapped dispatch).
         """
         import jax
 
@@ -195,18 +205,18 @@ class _Executor:
         batch = np.stack([
             _planes(p.pattern, (p.x, rows, words),
                     _rng(self.spec, p)) for p in pts])  # (B, X, R, C)
-        be = self.backend(pts[0])
+        sess = self.session(pts[0])
         if self.mesh is not None:
             from repro.dist.sharding import sharding_for
             placed = jax.device_put(batch, sharding_for(
                 batch.shape, ("batch", None, None, None), self.mesh))
-            got = np.asarray(be.majx_batch(placed))      # (B, R, C)
+            got = np.asarray(sess.majx_batch(placed))    # (B, R, C)
         else:
             prog, out_base = planner.fused_majx_program(pts, rows)
             state = np.concatenate([
                 batch.reshape(-1, words),
                 np.zeros((len(pts) * rows, words), np.uint32)])
-            final = np.asarray(be.run_fused(prog, state))
+            final = np.asarray(sess.run_fused(prog, state))
             got = final[out_base:].reshape(len(pts), rows, words)
         # Same reference source as the per-point path: the oracle backend.
         want = np.asarray(self._oracle.majx_batch(np.asarray(batch)))
@@ -218,13 +228,15 @@ class _Executor:
         return out
 
     def execute(self, chunk: planner.Chunk) -> list[dict]:
-        # Fresh backend instances per chunk: records depend only on
-        # (spec, chunk), never on which chunks this process ran before.
-        self._backends.clear()
+        # Fresh sessions (and backends) per chunk: records depend only
+        # on (spec, chunk), never on which chunks this process ran
+        # before.  The shared compile cache survives — schedules are
+        # content-pure.
+        self._sessions.clear()
         if chunk.backend == ANALYTIC or self.spec.op == "simra":
             return [self._analytic(p) for p in chunk.points]
         if self.spec.op == "majx":
-            caps = self.backend(chunk.points[0]).capabilities()
+            caps = self.session(chunk.points[0]).capabilities()
             # The fused batch path runs the whole chunk under one
             # ExecutionContext, so it is only valid for backends whose
             # results are regime-insensitive (digital: no error

@@ -1,0 +1,311 @@
+"""Session-layer tests: typed row allocation, build-time validation,
+the content-hashed compile cache, scoped dispatch counters, and the
+Program JSON round-trip.
+
+The load-bearing claims: (1) a `DramSession` executes any valid
+addressed Program bit-identically to its raw backend (it only *adds*
+validation and schedule caching); (2) malformed programs fail at build
+time with subarray context, never inside a kernel; (3) a repeated
+program is a schedule-cache hit; (4) dispatch counts read through
+`count_dispatches` scopes cannot leak between workloads.
+"""
+
+import numpy as np
+import pytest
+
+from _proptest import rand_u32, sweep
+from repro.backends import ExecutionContext, get_backend, resolve_backend
+from repro.compile import build_schedule
+from repro.pud.isa import Program
+from repro.session import (CompileCache, DramSession, PlaneGroup,
+                           ProgramValidationError, RowAllocationError,
+                           SessionError, program_key)
+from test_compile_differential import ROWS, WORDS, rand_program
+
+IDEAL = ExecutionContext(ideal=True)
+
+
+def valid_rand_program(rng, rows: int = ROWS, n_ops: int = 10) -> Program:
+    """A hazard-heavy random program that passes session validation
+    (per-op duplicate destinations deduped; everything else is legal —
+    aliasing, rewrites, dead stores, cost-only ops all stay)."""
+    prog = Program()
+    for op in rand_program(rng, rows=rows, n_ops=n_ops).ops:
+        dsts = tuple(dict.fromkeys(op.dsts))
+        prog.emit(op.kind, x=op.x, n_act=op.n_act, tag=op.tag,
+                  srcs=op.srcs, dsts=dsts)
+    return prog
+
+
+# ------------------------------------------------- Program JSON round-trip
+
+
+@sweep(12)
+def test_program_json_roundtrip(rng):
+    """to_json -> from_json is the identity on random op streams
+    (addresses, arities, cost-only ops, tags) and is itself stable."""
+    prog = rand_program(rng, n_ops=int(rng.integers(0, 25)))
+    text = prog.to_json()
+    back = Program.from_json(text)
+    assert back.ops == prog.ops
+    assert back.to_json() == text
+
+
+def test_program_json_roundtrip_edges():
+    prog = Program()
+    assert Program.from_json(prog.to_json()).ops == []  # empty program
+    prog.emit("MAJ", x=9, n_act=32, tag="weird/tag[αβ]\"quoted\"",
+              srcs=tuple(range(9)), dsts=(9, 10))
+    prog.emit("WR", tag="")  # cost-only, no addresses
+    back = Program.from_json(prog.to_json())
+    assert back.ops == prog.ops
+    assert back.ops[0].tag == "weird/tag[αβ]\"quoted\""
+
+
+# ------------------------------------------------------- session execution
+
+
+@sweep(8)
+def test_session_matches_backend(rng):
+    """run/run_fused through a session == the raw backend, both paths."""
+    prog = valid_rand_program(rng)
+    state = rand_u32(rng, ROWS, WORDS)
+    want = np.asarray(get_backend("oracle", IDEAL).run(prog, state))
+    for name in ("oracle", "pallas"):
+        sess = DramSession(name, IDEAL)
+        assert (np.asarray(sess.run(prog, state)) == want).all()
+        assert (np.asarray(sess.run_fused(prog, state)) == want).all()
+
+
+def test_run_fused_accepts_prebuilt_schedule():
+    rng = np.random.default_rng(3)
+    prog = valid_rand_program(rng)
+    state = rand_u32(rng, ROWS, WORDS)
+    be = get_backend("pallas", IDEAL)
+    want = np.asarray(be.run(prog, state))
+    got = be.run_fused(prog, state, sched=build_schedule(prog))
+    assert (np.asarray(got) == want).all()
+
+
+# ----------------------------------------------------------- compile cache
+
+
+def test_compile_cache_hit_on_repeat():
+    rng = np.random.default_rng(0)
+    sess = DramSession("pallas", IDEAL)
+    prog = valid_rand_program(rng)
+    state = rand_u32(rng, ROWS, WORDS)
+    first = np.asarray(sess.run_fused(prog, state))
+    assert (sess.cache.stats.hits, sess.cache.stats.misses) == (0, 1)
+    second = np.asarray(sess.run_fused(prog, state))
+    assert (sess.cache.stats.hits, sess.cache.stats.misses) == (1, 1)
+    assert (first == second).all()
+    # schedule_for returns the *same* cached object, no re-scheduling
+    assert sess.schedule_for(prog) is sess.schedule_for(prog)
+
+
+def test_program_key_ignores_tags_only():
+    a, b, c = Program(), Program(), Program()
+    a.emit("MAJ", x=3, n_act=4, tag="left", srcs=(0, 1, 2), dsts=(3,))
+    b.emit("MAJ", x=3, n_act=4, tag="right", srcs=(0, 1, 2), dsts=(3,))
+    c.emit("MAJ", x=3, n_act=4, tag="left", srcs=(0, 1, 2), dsts=(4,))
+    assert program_key(a) == program_key(b)   # provenance never executes
+    assert program_key(a) != program_key(c)   # addresses do
+
+
+def test_shared_cache_across_sessions():
+    """Schedules are content-pure: the sweep runner's per-chunk sessions
+    share one cache and the second chunk-shaped program is a hit."""
+    rng = np.random.default_rng(1)
+    cache = CompileCache()
+    prog = valid_rand_program(rng)
+    state = rand_u32(rng, ROWS, WORDS)
+    DramSession("pallas", IDEAL, cache=cache).run_fused(prog, state)
+    DramSession("pallas", IDEAL, cache=cache).run_fused(prog, state)
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_cache_eviction_bounded():
+    cache = CompileCache(maxsize=2)
+    for d in (3, 4, 5, 6):
+        p = Program()
+        p.emit("MAJ", x=3, n_act=4, srcs=(0, 1, 2), dsts=(d,))
+        cache.schedule_for(p)
+    assert len(cache) == 2
+    assert cache.stats.misses == 4
+
+
+def test_elementwise_through_session_caches():
+    sess = DramSession("pallas", IDEAL)
+    a = np.arange(8, dtype=np.uint32)
+    b = np.arange(8, dtype=np.uint32) * 3 + 1
+    out1, _ = sess.elementwise("add", a, b, tier=5, n_act=32)
+    out2, _ = sess.elementwise("add", a, b, tier=5, n_act=32)
+    assert (np.asarray(out1) == (a + b).astype(np.uint32)).all()
+    assert (np.asarray(out2) == (a + b).astype(np.uint32)).all()
+    assert sess.cache.stats.hits >= 1
+
+
+# ------------------------------------------------------ typed construction
+
+
+def test_builder_program_runs_everywhere():
+    rng = np.random.default_rng(2)
+    sess = DramSession("oracle", IDEAL)
+    b = sess.program(rows=16, name="typed-demo")
+    ins = b.input(rand_u32(rng, 5, 8))
+    vote = b.maj(*list(ins), tag="vote")
+    inv = b.not_(vote, tag="inv")
+    fan = b.mrc(inv, 4, tag="fan")
+    prog, state = b.build(), b.initial_state()
+    assert prog.n_rows() == 11 and len(fan) == 4
+    want = np.asarray(sess.run(prog, state))
+    for name in ("oracle", "sim", "pallas"):
+        got = np.asarray(DramSession(name, IDEAL).run_fused(prog, state))
+        assert (got == want).all(), name
+    # builder.run() is the same execution, compile-cached
+    assert (np.asarray(b.run()) == want).all()
+
+
+def test_builder_input_binding_positions():
+    sess = DramSession("oracle", IDEAL)
+    b = sess.program()
+    scratch = b.alloc_rows(2, tag="scratch")
+    vals = np.arange(16, dtype=np.uint32).reshape(2, 8)
+    bound = b.input(vals)
+    state = b.initial_state()
+    assert state.shape == (4, 8)
+    assert (state[list(scratch.indices)] == 0).all()
+    assert (state[list(bound.indices)] == vals).all()
+
+
+def test_allocator_capacity_error_names_subarray():
+    sess = DramSession("oracle", IDEAL)
+    b = sess.program(rows=4, name="tiny")
+    b.alloc_rows(3)
+    with pytest.raises(RowAllocationError, match=r"tiny.*3/4 in use"):
+        b.alloc_rows(2, tag="overflow")
+
+
+def test_builder_rejects_even_arity():
+    b = DramSession("oracle", IDEAL).program(name="arity")
+    rows = b.alloc_rows(4)
+    with pytest.raises(SessionError, match="odd >= 3"):
+        b.maj(rows[0], rows[1], rows[2], rows[3])
+
+
+def test_builder_rejects_foreign_rows():
+    sess = DramSession("oracle", IDEAL)
+    mine, other = sess.program(name="mine"), sess.program(name="other")
+    r = other.alloc_rows(3)
+    with pytest.raises(SessionError, match="different program"):
+        mine.maj(r[0], r[1], r[2])
+
+
+def test_builder_rejects_duplicate_mrc_destinations():
+    b = DramSession("oracle", IDEAL).program(name="dup")
+    src = b.alloc_row()
+    d = b.alloc_row(tag="dst")
+    with pytest.raises(SessionError, match="more than once"):
+        b.mrc(src, PlaneGroup((d, d)))
+
+
+def test_builder_allows_input_replication():
+    """Duplicate MAJ *operands* are the paper's replication identity."""
+    b = DramSession("oracle", IDEAL).program()
+    vals = b.input(np.array([[0xF0F0F0F0], [0x00FF00FF], [0xFFFF0000]],
+                            np.uint32))
+    b.maj(vals[0], vals[1], vals[2], vals[2], vals[2], tag="maj5-rep")
+    final = np.asarray(b.run())
+    assert final[3, 0] == 0xFFFF0000  # replicated operand dominates
+
+
+# --------------------------------------------------- build-time validation
+
+
+def test_session_rejects_out_of_range_rows():
+    prog = Program()
+    prog.emit("MAJ", x=3, n_act=4, tag="bad", srcs=(0, 1, 7), dsts=(2,))
+    sess = DramSession("pallas", IDEAL)
+    state = np.zeros((4, 8), np.uint32)
+    with pytest.raises(ProgramValidationError,
+                       match=r"source row 7.*4-row subarray"):
+        sess.run_fused(prog, state)
+    with pytest.raises(ProgramValidationError, match="4-row subarray"):
+        sess.run(prog, state)
+
+
+def test_session_rejects_duplicate_destinations():
+    prog = Program()
+    prog.emit("MRC", n_act=4, srcs=(0,), dsts=(1, 2, 1))
+    with pytest.raises(ProgramValidationError, match=r"\[1\] more than"):
+        DramSession("oracle", IDEAL).run(prog, np.zeros((3, 8), np.uint32))
+
+
+def test_session_rejects_malformed_maj():
+    prog = Program()
+    prog.emit("MAJ", x=5, n_act=8, srcs=(0, 1, 2), dsts=(3,))
+    with pytest.raises(ProgramValidationError, match="MAJ5 carries 3"):
+        DramSession("oracle", IDEAL).run(prog, np.zeros((4, 8), np.uint32))
+
+
+def test_cost_only_ops_exempt_from_validation():
+    prog = Program()
+    prog.emit("MAJ", x=3, n_act=4)   # cost-only: no addresses at all
+    prog.emit("WR")
+    sess = DramSession("oracle", IDEAL)
+    state = np.ones((2, 4), np.uint32)
+    assert (np.asarray(sess.run_fused(prog, state)) == state).all()
+
+
+# -------------------------------------------------------- dispatch scopes
+
+
+def test_dispatch_scope_counts_window_only():
+    rng = np.random.default_rng(4)
+    sess = DramSession("pallas", IDEAL)
+    planes = rand_u32(rng, 3, 2, 16)
+    sess.majx(planes)  # outside any scope: must not leak in
+    with sess.count_dispatches() as scope:
+        sess.majx(planes)
+        sess.majx(planes)
+    assert scope.count == 2
+    with sess.count_dispatches() as scope2:
+        sess.majx(planes)
+    assert scope2.count == 1 and scope.count == 2
+
+
+def test_dispatch_scope_frozen_after_exit():
+    rng = np.random.default_rng(5)
+    sess = DramSession("pallas", IDEAL)
+    planes = rand_u32(rng, 3, 2, 16)
+    with sess.count_dispatches() as scope:
+        sess.majx(planes)
+    sess.majx(planes)          # after exit: scope must not move
+    assert scope.count == 1
+
+
+def test_dispatch_scopes_nest():
+    rng = np.random.default_rng(6)
+    be = get_backend("pallas", IDEAL)
+    planes = rand_u32(rng, 3, 2, 16)
+    with be.count_dispatches() as outer:
+        be.majx(planes)
+        with be.count_dispatches() as inner:
+            be.majx(planes)
+        assert inner.count == 1
+        be.majx(planes)
+    assert outer.count == 3
+
+
+# --------------------------------------------------------- resolution
+
+
+def test_resolve_backend_passthrough_and_mismatch():
+    be = get_backend("oracle", IDEAL)
+    assert resolve_backend(be) is be
+    assert resolve_backend(be, IDEAL) is be
+    with pytest.raises(ValueError, match="already carries"):
+        resolve_backend(be, ExecutionContext(ideal=False))
+    sess = DramSession(be)      # sessions accept prebuilt instances
+    assert sess.backend is be and sess.ctx == IDEAL
