@@ -27,16 +27,17 @@ hit), which needs no timing stability.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from _bench_io import default_out, write_bench_json
 
 SCHEMA = "repro-bench/fused-v2"
-DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "results",
-                           "BENCH_fused.json")
+DEFAULT_OUT = default_out("BENCH_fused.json")
 
 
 # --------------------------------------------------------------- workloads
@@ -209,11 +210,7 @@ def main(argv=None) -> int:
         },
         "workloads": rows,
     }
-    out_path = os.path.abspath(args.out)
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(doc, f, indent=2)
-    print(f"[bench] wrote {out_path}")
+    write_bench_json(args.out, doc)
 
     for r in rows:
         flag = "" if r["per_op"]["parity"] and r["fused"]["parity"] else \

@@ -46,6 +46,43 @@ print(f"bench gate OK: add32 fused {add['fused']['dispatches']} vs "
 PY
 rm -rf "$BENCH_CI_ROOT"
 
+echo "== serve bench smoke: coalesced batching vs sequential (SLO gate) =="
+SERVE_CI_ROOT=$(mktemp -d)
+PYTHONPATH=src python -m benchmarks.serve_bench --smoke \
+    --out "$SERVE_CI_ROOT/BENCH_serve.json"
+PYTHONPATH=src python - "$SERVE_CI_ROOT/BENCH_serve.json" <<'PY'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+assert doc["schema"] == "repro-bench/serve-v1", doc["schema"]
+points = {(p["offered"], p["mode"]): p for p in doc["points"]}
+loads = sorted({o for o, _ in points})
+assert loads, points
+for o in loads:
+    seq, bat = points[(o, "sequential")], points[(o, "batched")]
+    # Structural gate (no timing stability needed): coalescing must cut
+    # the kernel-dispatch count and actually fill batches.
+    assert bat["dispatches"] < seq["dispatches"], \
+        (o, bat["dispatches"], seq["dispatches"])
+    assert bat["batch_occupancy"] > 1.0, (o, bat["batch_occupancy"])
+    # p99 latency must be recorded (non-null) at every point.
+    assert seq["p99_ms"] is not None and bat["p99_ms"] is not None, o
+    assert seq["shed"] == 0 and bat["shed"] == 0, o
+# Throughput gate at the smoke load point (largest load; widest margin).
+o = loads[-1]
+seq, bat = points[(o, "sequential")], points[(o, "batched")]
+assert bat["throughput_rps"] >= seq["throughput_rps"], \
+    (bat["throughput_rps"], seq["throughput_rps"])
+# The batched service must be hitting the shared schedule cache.
+assert bat["cache"]["hit_rate"] > 0, bat["cache"]
+print(f"serve gate OK: load {o} batched {bat['throughput_rps']:.0f} req/s"
+      f" / {bat['dispatches']} dispatches vs sequential "
+      f"{seq['throughput_rps']:.0f} req/s / {seq['dispatches']}; "
+      f"occupancy {bat['batch_occupancy']:.1f}, cache hit rate "
+      f"{bat['cache']['hit_rate']*100:.0f}%")
+PY
+rm -rf "$SERVE_CI_ROOT"
+
 echo "== docs check (module paths in docs/*.md resolve) =="
 python scripts/check_docs.py
 

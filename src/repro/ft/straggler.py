@@ -5,26 +5,48 @@ steps are lockstep) but (a) detecting persistently slow workers and
 (b) re-meshing without them (see repro.ft.elastic), plus (c) bounded-delay
 step skipping for transient hiccups.  The detector keeps a per-worker EMA
 of step durations and flags workers whose EMA exceeds the fleet median by
-``threshold`` x; the trainer consults it every ``check_every`` steps.
+``threshold`` x; the trainer consults it every ``check_every`` steps, and
+the serve layer's SLO monitor (:mod:`repro.serve.slo`) reuses it with one
+"worker" per pooled ``DramSession`` to flag persistently slow sessions.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class StragglerDetector:
+    """Per-worker EMA step-time tracker (see module docstring).
+
+    ``ema`` may be seeded with a prior ``(n_workers,)`` vector (resuming
+    a detector across re-meshes); by default every worker starts cold at
+    0.0, meaning "no sample yet".  The field is normalized and
+    shape-checked in ``__post_init__`` — after construction it is always
+    a float ``(n_workers,)`` array, never ``None``.
+    """
+
     n_workers: int
     alpha: float = 0.2
     threshold: float = 1.5
-    ema: np.ndarray = None
+    ema: Optional[np.ndarray] = dataclasses.field(default=None)
 
     def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
         if self.ema is None:
             self.ema = np.zeros(self.n_workers)
+        else:
+            self.ema = np.asarray(self.ema, dtype=float)
+            if self.ema.shape != (self.n_workers,):
+                raise ValueError(
+                    f"seeded ema shape {self.ema.shape} != "
+                    f"({self.n_workers},)")
 
     def record(self, worker: int, step_time_s: float) -> None:
         cur = self.ema[worker]

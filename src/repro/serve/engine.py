@@ -5,18 +5,28 @@ and queued requests are prefilled into it (continuous batching a la Orca /
 vLLM).  Greedy or temperature sampling.  All model math lives in
 repro.models.model; the engine is pure scheduling.
 
-PUD hooks: the engine carries a :class:`~repro.session.DramSession`
-(backend is still a one-string choice) for in-memory integrity work — a
-majority vote healing silent corruption across parameter replicas before
-they serve traffic, with the offload planner recording where the vote
-*would* run on PUD-capable memory (advisory on TPU-only deployments).
-The session's compile cache makes repeated votes (every heal after the
-first with the same parameter shapes) skip re-scheduling entirely.
+PUD hooks: the engine's integrity work (replica vote-healing and
+bit-level verification) runs through a :class:`~repro.serve.service.
+PudService` — the engine is a thin *client* submitting typed
+:class:`~repro.serve.queue.HealRequest`/:class:`~repro.serve.queue.
+IntegrityRequest` work, so engine votes share the service's session
+pool, schedule cache, continuous batching, and SLO accounting with
+every other tenant.  The offload planner's verdict (where the vote
+*would* run on PUD-capable memory; advisory on TPU-only deployments)
+rides back on each heal result.
+
+Integrity votes must be error-free, so healing on a non-ideal
+:class:`~repro.backends.context.ExecutionContext` (a stochastic backend
+can corrupt the very bits it claims to heal) emits
+:class:`IntegrityContextWarning` — or raises
+:class:`IntegrityContextError` under ``strict_integrity=True``.
+Non-ideal contexts are for fidelity studies, never serving deployments.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import jax
@@ -27,7 +37,16 @@ from repro.backends import ExecutionContext
 from repro.configs.base import ModelConfig
 from repro.core import bitplanes as bp
 from repro.models import model as M
-from repro.session import DramSession
+from repro.serve.queue import HealRequest, IntegrityRequest, ServeError
+from repro.serve.service import PudService, ServiceConfig
+
+
+class IntegrityContextError(ServeError):
+    """heal_params refused to run on a non-ideal context (strict mode)."""
+
+
+class IntegrityContextWarning(UserWarning):
+    """heal_params is running on a non-ideal (stochastic) context."""
 
 
 @dataclasses.dataclass
@@ -46,19 +65,27 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, max_seq: int = 256,
                  greedy: bool = True, seed: int = 0,
                  pud_backend: str = "pallas",
-                 pud_ctx: Optional[ExecutionContext] = None):
+                 pud_ctx: Optional[ExecutionContext] = None,
+                 pud_service: Optional[PudService] = None,
+                 strict_integrity: bool = False,
+                 tenant: str = "engine"):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
         self.greedy = greedy
         self.key = jax.random.PRNGKey(seed)
-        # Integrity votes must be error-free: default to an ideal context
-        # so a stochastic backend ("sim") can't corrupt params it claims
-        # to heal.  Pass a non-ideal pud_ctx explicitly only for fidelity
-        # studies, never for a serving deployment.
-        self.pud = DramSession(pud_backend,
-                               pud_ctx or ExecutionContext(ideal=True),
-                               name="serve-pud")
+        # Integrity work runs through a PudService; pass a shared
+        # ``pud_service`` to pool votes with other engines/tenants, or
+        # let the engine own a single-session service.  The service
+        # defaults to an ideal context (see module docstring).
+        self.service = pud_service or PudService(ServiceConfig(
+            backend=pud_backend,
+            ctx=pud_ctx or ExecutionContext(ideal=True), pool_size=1))
+        self.strict_integrity = strict_integrity
+        self.tenant = tenant
+        #: Compat: the first pooled session still answers the whole
+        #: Backend surface (examples introspect ``engine.pud.ctx`` etc.).
+        self.pud = self.service.sessions[0]
         self.pud_decisions: list = []
         self._decode = jax.jit(
             lambda p, t, c: M.decode(p, t, c, cfg))
@@ -66,85 +93,85 @@ class Engine:
             lambda p, b: M.prefill(p, b, cfg, max_seq))
 
     # ------------------------------------------------------------ PUD hooks
-    def heal_params(self, replicas: Sequence) -> int:
-        """Majority-vote parameter replicas through the PUD backend.
+    def _check_integrity_ctx(self) -> None:
+        """Enforce the ideal-context-by-default healing rule.
 
-        ``replicas``: >= 3 (odd) pytrees with the engine's param structure.
-        Installs the healed params and returns the number of corrected
-        bits.
-
-        The whole vote is ONE addressed Program, built through the
-        session's typed builder: every leaf's packed words are
-        concatenated per replica and bound as input row groups, one MAJ
-        op per row-image votes into an output group, and the program
-        runs compile-cached through ``self.pud.run_fused`` — a
-        single-level schedule the ``pallas`` backend executes as one
-        batched MAJX dispatch, with repeat votes over the same shapes
-        hitting the session's schedule cache.  The offload planner's
-        verdict for the fused program is appended to
-        ``self.pud_decisions`` (advisory: where the vote would run on
-        PUD-capable memory).
+        Warns on a non-ideal context; raises under ``strict_integrity``.
         """
-        from repro.core import calibration as cal
-        from repro.kernels import tiling
-        from repro.pud.offload import plan_program
+        if self.service.ctx.ideal:
+            return
+        msg = (f"heal_params is running on a non-ideal ExecutionContext "
+               f"(mfr={self.service.ctx.mfr!r}, ideal=False): a "
+               f"stochastic backend can corrupt the very bits it claims "
+               f"to heal. Use ExecutionContext(ideal=True) for serving; "
+               f"non-ideal contexts are for fidelity studies only.")
+        if self.strict_integrity:
+            raise IntegrityContextError(msg)
+        warnings.warn(msg, IntegrityContextWarning, stacklevel=3)
 
-        x = len(replicas)
-        flats = [jax.tree.leaves(r) for r in replicas]
-        treedef = jax.tree.structure(replicas[0])
+    def _pack_pytree(self, tree):
+        """Pytree -> ((rows, width) tile, metas, total_words, width)."""
+        from repro.kernels import tiling
+
         metas = []  # (n_words, shape, dtype) per leaf, for re-splitting
-        for leaf in flats[0]:
+        for leaf in jax.tree.leaves(tree):
             w, shape, dtype = bp.bitcast_to_planes(leaf)
             metas.append((int(w.size), shape, dtype))
-        rep_words = [
-            jnp.concatenate([bp.bitcast_to_planes(leaf)[0].reshape(-1)
-                             for leaf in flat])
-            for flat in flats
-        ]
-        total = int(rep_words[0].size)
+        words = jnp.concatenate([bp.bitcast_to_planes(leaf)[0].reshape(-1)
+                                 for leaf in jax.tree.leaves(tree)])
+        total = int(words.size)
         width = min(tiling.MAX_BLOCK_C, total)
-        tiles = [tiling.words_to_rows(w, width) for w in rep_words]
-        n_rows = tiles[0].shape[0]
+        return np.asarray(tiling.words_to_rows(words, width)), metas, \
+            total, width
 
-        # One MAJ op per row-image; all ops are level 0 -> one dispatch.
-        # Votes issue at the full 32-row activation (the §5 replication
-        # ladder's best success rate — the same point plan_vote prices).
-        b = self.pud.program(rows=(x + 1) * n_rows, name="heal-vote")
-        groups = [b.input(tile, tag=f"heal/replica[{rep}]")
-                  for rep, tile in enumerate(tiles)]
-        out = b.alloc_rows(n_rows, tag="heal/voted")
-        n_act = max(cal.N_ACT_LEVELS)
-        for r in range(n_rows):
-            b.maj(*(g[r] for g in groups), dst=out[r], n_act=n_act,
-                  tag=f"heal/row[{r}]")
-        prog = b.build()
-        final = self.pud.run_fused(prog, b.initial_state())
-        voted = final[np.asarray(out.indices)].reshape(-1)[:total]
-        fixed_bits = int(self.pud.mismatch(rep_words[0], voted))
+    def heal_params(self, replicas: Sequence) -> int:
+        """Majority-vote parameter replicas through the PUD service.
+
+        ``replicas``: >= 3 (odd) pytrees with the engine's param
+        structure.  Installs the healed params and returns the number
+        of corrected bits.
+
+        The engine is a thin client: every replica's packed words
+        become one tile of a single typed
+        :class:`~repro.serve.queue.HealRequest`, and the service's
+        batcher lowers it (coalesced with any concurrent tenants'
+        same-shape votes) to ONE single-level fused Program — one
+        batched MAJX dispatch on the ``pallas`` backend, schedule
+        -cached across repeat votes.  The offload planner's verdict for
+        the fused program is appended to ``self.pud_decisions``
+        (advisory: where the vote would run on PUD-capable memory).
+        """
+        self._check_integrity_ctx()
+        tiles, metas, total, _ = self._pack_pytree(replicas[0])
+        rep_tiles = [tiles] + [self._pack_pytree(r)[0]
+                               for r in replicas[1:]]
+        [result] = self.service.serve([HealRequest(
+            replicas=np.stack(rep_tiles), tenant=self.tenant)])
+        voted = result.healed.reshape(-1)[:total]
 
         healed_leaves, off = [], 0
+        treedef = jax.tree.structure(replicas[0])
         for n_words, shape, dtype in metas:
             healed_leaves.append(bp.bitcast_from_planes(
-                voted[off:off + n_words], shape, dtype))
+                jnp.asarray(voted[off:off + n_words]), shape, dtype))
             off += n_words
         self.params = jax.tree.unflatten(treedef, healed_leaves)
-        # The planner prices the same schedule the session just executed
-        # (a cache hit, not a re-leveling).
-        self.pud_decisions.append(
-            plan_program(prog, width * 4, ctx=self.pud.ctx,
-                         sched=self.pud.schedule_for(prog)))
-        return fixed_bits
+        self.pud_decisions.append(result.decision)
+        return result.fixed_bits
 
     def verify_params(self, reference) -> float:
-        """Bit-level success rate of live params vs a reference pytree."""
-        total_bits = bad = 0
-        for a, b in zip(jax.tree.leaves(self.params),
-                        jax.tree.leaves(reference)):
-            wa, _, _ = bp.bitcast_to_planes(a)
-            wb, _, _ = bp.bitcast_to_planes(b)
-            bad += int(self.pud.mismatch(wa, wb))
-            total_bits += int(wa.size) * 32
-        return 1.0 - bad / max(total_bits, 1)
+        """Bit-level success rate of live params vs a reference pytree.
+
+        One typed :class:`~repro.serve.queue.IntegrityRequest` through
+        the service (the tiles' zero padding matches on both sides, so
+        the packed comparison equals the per-leaf one; the rate is
+        normalized by the real parameter bits, not the padding).
+        """
+        live, _, total, _ = self._pack_pytree(self.params)
+        ref, _, _, _ = self._pack_pytree(reference)
+        [result] = self.service.serve([IntegrityRequest(
+            live=live, reference=ref, tenant=self.tenant)])
+        return 1.0 - result.mismatch_bits / max(total * 32, 1)
 
     # ------------------------------------------------------------ serving
     def _sample(self, logits) -> np.ndarray:

@@ -14,8 +14,12 @@ ops differ only in point-index tags therefore share one schedule.
 A :class:`~repro.compile.schedule.Schedule` is a pure function of that
 content (frozen dataclasses, no backend state), so one cache can be
 shared across sessions — the sweep runner shares a process-wide cache
-across its per-chunk sessions.  ``stats`` records hits/misses; the
-bench harness reports the hit rate in ``BENCH_fused.json``.
+across its per-chunk sessions, and the serve layer's session pool
+shares one across concurrent request batches.  Lookups are serialized
+by a lock (build included), so N concurrent submissions of one program
+shape are exactly 1 miss + N-1 hits — never N racing builds.
+``stats`` records hits/misses; the bench harnesses report the hit rate
+in ``BENCH_fused.json`` / ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import threading
 from typing import Optional
 
 from repro.compile.schedule import Schedule, build_schedule
@@ -70,6 +75,7 @@ class CompileCache:
         self.stats = CacheStats()
         self._entries: collections.OrderedDict[str, Schedule] = \
             collections.OrderedDict()
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -79,17 +85,20 @@ class CompileCache:
         """The program's schedule — cached, or built and admitted.
 
         Pass a precomputed ``key`` (from :func:`program_key`) to skip
-        re-hashing when the caller already derived it.
+        re-hashing when the caller already derived it.  Thread-safe:
+        the first caller for a key builds under the lock, concurrent
+        callers for the same key wait and hit.
         """
         key = key or program_key(program)
-        sched = self._entries.get(key)
-        if sched is not None:
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
+        with self._lock:
+            sched = self._entries.get(key)
+            if sched is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return sched
+            self.stats.misses += 1
+            sched = build_schedule(program)
+            self._entries[key] = sched
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
             return sched
-        self.stats.misses += 1
-        sched = build_schedule(program)
-        self._entries[key] = sched
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-        return sched

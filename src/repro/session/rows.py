@@ -74,13 +74,22 @@ class PlaneGroup:
 
 
 class RowAllocator:
-    """Bump allocator over one subarray image's row space.
+    """Bump allocator (with reuse) over one subarray image's row space.
 
     ``capacity=None`` is unbounded (the executing image is sized by
     :meth:`n_rows` at build time); with a capacity, exceeding the row
     budget raises :class:`RowAllocationError` naming the subarray and
     the rows in use — the build-time analogue of running off the end of
     a physical subarray.
+
+    Program builders allocate monotonically and never release, so their
+    row addresses stay append-ordered.  Long-lived *arenas* (the serve
+    layer's per-tenant row budgets) additionally :meth:`free` completed
+    reservations: freed indices are reused by later allocations, which
+    is what lets a bounded tenant budget admit an unbounded request
+    stream.  Freeing invalidates the released handles — the arena owner
+    must drop them; a retained stale handle aliases whichever
+    reservation is handed the index next.
     """
 
     def __init__(self, capacity: Optional[int] = None,
@@ -88,11 +97,17 @@ class RowAllocator:
         self.capacity = capacity
         self.name = name
         self._next = 0
+        self._free: list[int] = []
 
     @property
     def n_rows(self) -> int:
-        """Rows handed out so far == the executing image's row count."""
+        """High-water mark == the executing image's row count."""
         return self._next
+
+    @property
+    def in_use(self) -> int:
+        """Rows currently reserved (allocated and not freed)."""
+        return self._next - len(self._free)
 
     def alloc_row(self, tag: str = "") -> Row:
         return self.alloc(1, tag=tag)[0]
@@ -101,14 +116,34 @@ class RowAllocator:
         if n < 1:
             raise RowAllocationError(
                 f"{self.name}: cannot allocate {n} rows (tag {tag!r})")
-        if self.capacity is not None and self._next + n > self.capacity:
+        if self.capacity is not None and self.in_use + n > self.capacity:
             raise RowAllocationError(
                 f"{self.name}: out of rows allocating {n} more "
-                f"(tag {tag!r}): {self._next}/{self.capacity} in use")
-        rows = tuple(Row(self._next + i, tag=tag, allocator=self)
-                     for i in range(n))
-        self._next += n
+                f"(tag {tag!r}): {self.in_use}/{self.capacity} in use")
+        indices = [self._free.pop() for _ in range(min(n, len(self._free)))]
+        fresh = n - len(indices)
+        indices.extend(range(self._next, self._next + fresh))
+        self._next += fresh
+        rows = tuple(Row(i, tag=tag, allocator=self) for i in indices)
         return PlaneGroup(rows)
+
+    def free(self, rows) -> None:
+        """Release a :class:`Row`/:class:`PlaneGroup` back to the pool.
+
+        Ownership is validated; double-frees raise.  See the class
+        docstring for the handle-invalidation contract.
+        """
+        rows = (rows,) if isinstance(rows, Row) else tuple(rows)
+        for row in rows:
+            if not self.owns(row):
+                raise RowAllocationError(
+                    f"{self.name}: cannot free row "
+                    f"{getattr(row, 'index', row)!r}: not allocated here")
+            if row.index in self._free or row.index >= self._next:
+                raise RowAllocationError(
+                    f"{self.name}: double free of row {row.index} "
+                    f"(tag {row.tag!r})")
+        self._free.extend(row.index for row in rows)
 
     def owns(self, row: Row) -> bool:
         return isinstance(row, Row) and row.allocator is self

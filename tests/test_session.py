@@ -220,6 +220,64 @@ def test_builder_allows_input_replication():
     assert final[3, 0] == 0xFFFF0000  # replicated operand dominates
 
 
+# -------------------------------------------------- arena row free-list
+
+
+def test_allocator_free_list_reuse():
+    """Arenas (serve admission) free completed reservations; freed
+    indices are reused, so a bounded budget admits an endless stream."""
+    from repro.session.rows import RowAllocator
+
+    a = RowAllocator(capacity=4, name="arena")
+    first = a.alloc(3, tag="req0")
+    assert (a.in_use, a.n_rows) == (3, 3)
+    a.free(first)
+    assert (a.in_use, a.n_rows) == (0, 3)   # high-water mark sticks
+    again = a.alloc(4, tag="req1")          # 3 reused + 1 fresh
+    assert a.in_use == 4
+    assert set(again.indices) == {0, 1, 2, 3}
+
+
+def test_allocator_free_validates_ownership_and_double_free():
+    from repro.session.rows import RowAllocator
+
+    a, other = RowAllocator(8, name="a"), RowAllocator(8, name="other")
+    mine = a.alloc(2)
+    theirs = other.alloc(1)
+    with pytest.raises(RowAllocationError, match="not allocated here"):
+        a.free(theirs)
+    a.free(mine)
+    with pytest.raises(RowAllocationError, match="double free"):
+        a.free(mine[0])
+
+
+def test_allocator_capacity_checks_in_use_not_high_water():
+    from repro.session.rows import RowAllocator
+
+    a = RowAllocator(capacity=2, name="tight")
+    for _ in range(5):                      # 5x the budget, sequentially
+        g = a.alloc(2)
+        a.free(g)
+    assert a.in_use == 0 and a.n_rows == 2  # never grew past the budget
+    a.alloc(2)
+    with pytest.raises(RowAllocationError, match="2/2 in use"):
+        a.alloc(1)
+
+
+def test_concurrent_cache_single_build():
+    """Thread-safe cache: concurrent same-key lookups build once."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    rng = np.random.default_rng(7)
+    cache = CompileCache()
+    prog = valid_rand_program(rng)
+    with ThreadPoolExecutor(max_workers=6) as pool:
+        scheds = list(pool.map(lambda _: cache.schedule_for(prog),
+                               range(6)))
+    assert (cache.stats.hits, cache.stats.misses) == (5, 1)
+    assert all(s is scheds[0] for s in scheds)
+
+
 # --------------------------------------------------- build-time validation
 
 
