@@ -1,14 +1,17 @@
-"""``repro.bench``: per-op vs fused Program execution harness.
+"""``repro.bench``: per-op vs fused vs megakernel execution harness.
 
-Times the same addressed :class:`~repro.pud.isa.Program` through both
-execution paths of a :class:`~repro.session.DramSession` — per-op
-interpretation (``run``, one kernel launch per MAJ/MRC op) and
+Times the same addressed :class:`~repro.pud.isa.Program` through all
+three execution paths of a :class:`~repro.session.DramSession` — per-op
+interpretation (``run``, one kernel launch per MAJ/MRC op),
 compile-cached fused execution (``run_fused``, one launch per schedule
-dispatch group, see :mod:`repro.compile`) — for the paper-motivated
-workloads: bit-serial adder / multiplier (§8.1) and the Multi-RowCopy
-secure-erase wave (§8.2).  Results land in a machine-readable
-``BENCH_fused.json`` so the perf trajectory of the fusion layer is
-recorded run over run (schema in ``docs/BENCH.md``).
+dispatch group, see :mod:`repro.compile`), and megakernel execution
+(``run_fused(mode="megakernel")``, ONE launch for the whole schedule
+via lowered level tables, see :mod:`repro.compile.megakernel`) — for
+the paper-motivated workloads: bit-serial adder / multiplier (§8.1)
+and the Multi-RowCopy secure-erase wave (§8.2).  Results land in a
+machine-readable ``BENCH_fused.json`` so the perf trajectory of the
+fusion layer is recorded run over run (schema ``repro-bench/fused-v3``
+in ``docs/BENCH.md``).
 
 Usage::
 
@@ -18,10 +21,12 @@ Usage::
 
 Every row carries wall-clock timings, *structural* dispatch counts
 (measured in a scoped ``count_dispatches`` window per run, so workloads
-never leak counts into each other), and the session compile-cache
-hits/misses of the fused path; the CI gate asserts on the structural
-columns (fused < per-op dispatches for the 32-bit adder, >= 1 cache
-hit), which needs no timing stability.
+never leak counts into each other), the modelled launch overhead
+(dispatches x :data:`repro.pud.offload.KERNEL_LAUNCH_NS` — the
+command-stream cost the megakernel collapses), and the session
+compile-cache hits/misses of the fused paths; the CI gate asserts on
+the structural columns (megakernel <= 2 dispatches for add32/mul8,
+fused < per-op, >= 1 cache hit), which needs no timing stability.
 """
 
 from __future__ import annotations
@@ -36,7 +41,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from _bench_io import default_out, write_bench_json
 
-SCHEMA = "repro-bench/fused-v2"
+SCHEMA = "repro-bench/fused-v3"
 DEFAULT_OUT = default_out("BENCH_fused.json")
 
 
@@ -131,22 +136,37 @@ def _timed(fn, session, reps: int):
 def bench_program(name: str, prog, state, sessions, ref, reps: int):
     import numpy as np
 
+    from repro.pud.offload import KERNEL_LAUNCH_NS
+
     want = np.asarray(ref.run(prog, state))
     rows = []
     for be_name, sess in sessions.items():
         modes = {}
-        for mode, runner in (("per_op", sess.run),
-                             ("fused", sess.run_fused)):
-            if mode == "fused":  # per-op execution never touches the cache
+        runners = (
+            ("per_op", lambda: sess.run(prog, state)),
+            ("fused", lambda: sess.run_fused(prog, state)),
+            ("megakernel",
+             lambda: sess.run_fused(prog, state, mode="megakernel")),
+        )
+        for mode, runner in runners:
+            if mode != "per_op":  # per-op never touches the caches
                 cache0 = sess.cache.stats.snapshot()
-            wall, out, dispatches = _timed(
-                lambda r=runner: r(prog, state), sess, reps)
-            modes[mode] = {"wall_s": wall, "dispatches": dispatches}
-            modes[mode]["parity"] = bool((np.asarray(out) == want).all())
-            if mode == "fused":
+                low0 = sess.cache.lowering_stats.snapshot()
+            wall, out, dispatches = _timed(runner, sess, reps)
+            modes[mode] = {
+                "wall_s": wall,
+                "dispatches": dispatches,
+                "launch_overhead_ns": dispatches * KERNEL_LAUNCH_NS,
+                "parity": bool((np.asarray(out) == want).all()),
+            }
+            if mode != "per_op":
                 d = sess.cache.stats.delta(cache0)
-                modes[mode]["cache"] = {"hits": d.hits,
-                                        "misses": d.misses}
+                modes[mode]["cache"] = {"hits": d.hits, "misses": d.misses}
+            if mode == "megakernel":
+                dl = sess.cache.lowering_stats.delta(low0)
+                modes[mode]["lowering_cache"] = {"hits": dl.hits,
+                                                 "misses": dl.misses}
+                modes[mode]["vmem"] = _vmem_plan(sess, prog, state)
         # The fused warm-up built (and cached) the schedule; reading the
         # level count back is a hit, never a second scheduling pass.
         rows.append({
@@ -156,12 +176,30 @@ def bench_program(name: str, prog, state, sessions, ref, reps: int):
             "n_levels": sess.schedule_for(prog).n_levels,
             "per_op": modes["per_op"],
             "fused": modes["fused"],
+            "megakernel": modes["megakernel"],
             "speedup": modes["per_op"]["wall_s"]
             / max(modes["fused"]["wall_s"], 1e-12),
             "dispatch_reduction": modes["per_op"]["dispatches"]
             / max(modes["fused"]["dispatches"], 1),
+            "megakernel_dispatch_reduction":
+            modes["per_op"]["dispatches"]
+            / max(modes["megakernel"]["dispatches"], 1),
         })
     return rows
+
+
+def _vmem_plan(sess, prog, state):
+    """The megakernel column-blocking decision for this (program, image),
+    or None on backends without the capability (their megakernel rows
+    measure the exact fallback path)."""
+    caps = sess.capabilities()
+    if not caps.megakernel:
+        return None
+    from repro.compile import plan_vmem
+
+    low = sess.cache.lowering_for(prog)
+    rows, words = state.shape
+    return plan_vmem(low, rows, words, caps.vmem_budget_bytes).as_dict()
 
 
 def main(argv=None) -> int:
@@ -198,6 +236,8 @@ def main(argv=None) -> int:
 
     hits = sum(s.cache.stats.hits for s in sessions.values())
     misses = sum(s.cache.stats.misses for s in sessions.values())
+    lhits = sum(s.cache.lowering_stats.hits for s in sessions.values())
+    lmisses = sum(s.cache.lowering_stats.misses for s in sessions.values())
     doc = {
         "schema": SCHEMA,
         "smoke": args.smoke,
@@ -208,25 +248,36 @@ def main(argv=None) -> int:
             "misses": misses,
             "hit_rate": hits / max(hits + misses, 1),
         },
+        "lowering_cache": {
+            "hits": lhits,
+            "misses": lmisses,
+            "hit_rate": lhits / max(lhits + lmisses, 1),
+        },
         "workloads": rows,
     }
     write_bench_json(args.out, doc)
 
     for r in rows:
-        flag = "" if r["per_op"]["parity"] and r["fused"]["parity"] else \
-            "  !! PARITY MISMATCH"
+        ok = (r["per_op"]["parity"] and r["fused"]["parity"]
+              and r["megakernel"]["parity"])
+        flag = "" if ok else "  !! PARITY MISMATCH"
         print(f"  {r['name']:12s} [{r['backend']:7s}] "
               f"per-op {r['per_op']['wall_s']*1e3:8.1f} ms "
               f"/{r['per_op']['dispatches']:5d} disp | fused "
               f"{r['fused']['wall_s']*1e3:8.1f} ms "
-              f"/{r['fused']['dispatches']:5d} disp | "
+              f"/{r['fused']['dispatches']:5d} disp | mega "
+              f"{r['megakernel']['wall_s']*1e3:8.1f} ms "
+              f"/{r['megakernel']['dispatches']:5d} disp | "
               f"{r['speedup']:5.2f}x wall, "
-              f"{r['dispatch_reduction']:5.1f}x dispatch{flag}")
-    cc = doc["compile_cache"]
+              f"{r['megakernel_dispatch_reduction']:5.1f}x mega "
+              f"dispatch{flag}")
+    cc, lc = doc["compile_cache"], doc["lowering_cache"]
     print(f"[bench] compile cache: {cc['hits']} hits / {cc['misses']} "
-          f"misses ({cc['hit_rate']*100:.0f}% hit rate)")
+          f"misses ({cc['hit_rate']*100:.0f}% hit rate); lowering cache: "
+          f"{lc['hits']} hits / {lc['misses']} misses")
     bad = [r for r in rows
-           if not (r["per_op"]["parity"] and r["fused"]["parity"])]
+           if not (r["per_op"]["parity"] and r["fused"]["parity"]
+                   and r["megakernel"]["parity"])]
     return 1 if bad else 0
 
 

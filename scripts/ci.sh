@@ -14,9 +14,9 @@ PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet
 PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet --expect-cached
 rm -rf "$SWEEP_CI_ROOT"
 
-echo "== program-fusion differential + golden suites =="
-PYTHONPATH=src python -m pytest -q tests/test_compile_differential.py \
-    tests/test_compile_golden.py
+echo "== program-fusion differential + golden + megakernel suites =="
+PYTHONPATH=src python -m pytest -x -q tests/test_compile_differential.py \
+    tests/test_compile_golden.py tests/test_megakernel_differential.py
 
 echo "== bench smoke: per-op vs fused (structural dispatch gate) =="
 BENCH_CI_ROOT=$(mktemp -d)
@@ -26,7 +26,7 @@ PYTHONPATH=src python - "$BENCH_CI_ROOT/BENCH_fused.json" <<'PY'
 import json, sys
 
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == "repro-bench/fused-v2", doc["schema"]
+assert doc["schema"] == "repro-bench/fused-v3", doc["schema"]
 rows = {(r["name"], r["backend"]): r for r in doc["workloads"]}
 assert len({n for n, _ in rows}) >= 3, sorted(rows)
 add = rows[("add32", "pallas")]
@@ -35,7 +35,7 @@ add = rows[("add32", "pallas")]
 assert add["fused"]["dispatches"] < add["per_op"]["dispatches"], add
 assert add["fused"]["dispatches"] <= add["n_levels"], add
 assert all(r["per_op"]["parity"] and r["fused"]["parity"]
-           for r in doc["workloads"])
+           and r["megakernel"]["parity"] for r in doc["workloads"])
 # Session compile cache: repeated programs must re-use their schedule.
 cc = doc["compile_cache"]
 assert cc["hits"] >= 1, cc
@@ -43,6 +43,28 @@ print(f"bench gate OK: add32 fused {add['fused']['dispatches']} vs "
       f"per-op {add['per_op']['dispatches']} dispatches "
       f"({add['n_levels']} levels); compile cache {cc['hits']} hits / "
       f"{cc['misses']} misses")
+
+# Megakernel gate: whole-schedule execution must collapse the deep
+# workloads (add32: ~34 levels, mul8: ~36) to at most 2 launches, never
+# launch more than the level-fused path, and cost no more wall time on
+# the smoke sizes; lowered tables must be cache-reused across reps.
+for wl in ("add32", "mul8"):
+    r = rows[(wl, "pallas")]
+    mega, fused = r["megakernel"], r["fused"]
+    assert mega["dispatches"] <= 2, (wl, mega)
+    assert mega["dispatches"] <= fused["dispatches"], (wl, r)
+    assert mega["launch_overhead_ns"] <= fused["launch_overhead_ns"], (wl, r)
+    assert mega["parity"], (wl, mega)
+    assert mega["vmem"] is not None and mega["vmem"]["block_c"] % 128 == 0
+add_mega = rows[("add32", "pallas")]["megakernel"]
+add_fused = rows[("add32", "pallas")]["fused"]
+assert add_mega["wall_s"] <= add_fused["wall_s"], (add_mega, add_fused)
+lc = doc["lowering_cache"]
+assert lc["hits"] >= 1, lc
+print(f"megakernel gate OK: add32 {add_mega['dispatches']} dispatch "
+      f"({add_mega['wall_s']*1e3:.1f} ms vs fused "
+      f"{add_fused['wall_s']*1e3:.1f} ms); lowering cache {lc['hits']} "
+      f"hits / {lc['misses']} misses")
 PY
 rm -rf "$BENCH_CI_ROOT"
 

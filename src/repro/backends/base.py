@@ -93,6 +93,16 @@ class Capabilities:
             kernel dispatch rather than a python loop — the property
             the sweep planner exploits to fuse a chunk of grid points
             into one launch.
+        megakernel: True when ``run_fused(mode="megakernel")`` executes
+            a whole Schedule in ONE kernel dispatch via lowered level
+            tables (:mod:`repro.compile.megakernel`).  Backends without
+            it still accept the mode and fall back to their exact
+            per-op/level path — mode is a request, this flag is the
+            contract.
+        vmem_budget_bytes: on-chip working-set budget the megakernel
+            VMEM planner (:func:`repro.compile.megakernel.plan_vmem`)
+            blocks the word axis against.  Irrelevant when
+            ``megakernel`` is False.
     """
 
     name: str
@@ -103,6 +113,8 @@ class Capabilities:
     max_majx: int
     n_act_levels: tuple[int, ...]
     native_batch: bool
+    megakernel: bool = False
+    vmem_budget_bytes: int = 8 * 2**20
 
 
 class Backend(abc.ABC):
@@ -210,21 +222,33 @@ class Backend(abc.ABC):
         return state
 
     def run_fused(self, program: Program, state: jax.Array, *,
-                  sched=None) -> jax.Array:
+                  sched=None, mode: str = "fused",
+                  lowering=None) -> jax.Array:
         """Execute an addressed Program through the fusion scheduler.
 
         Semantically identical to :meth:`run` (verified adversarially in
-        tests/test_compile_differential.py).  The default falls back to
-        per-op interpretation, so device-model and reference backends
+        tests/test_compile_differential.py and
+        tests/test_megakernel_differential.py).  The default falls back
+        to per-op interpretation, so device-model and reference backends
         keep their exact command-level semantics; backends with native
         batch dispatch (``pallas``) override this with level-batched
         kernel launches (see :mod:`repro.compile.schedule`).
 
-        ``sched`` optionally supplies the program's prebuilt
-        :class:`~repro.compile.schedule.Schedule` — how the session
-        layer's compile cache skips re-scheduling on repeated programs.
-        Backends that interpret per-op ignore it.
+        ``mode`` selects the execution strategy: ``"fused"`` (level
+        batching, the default) or ``"megakernel"`` (one dispatch for the
+        whole schedule, see :mod:`repro.compile.megakernel`).  Every
+        backend accepts every mode — backends whose
+        :meth:`capabilities` don't advertise ``megakernel`` satisfy the
+        request with their exact fallback, so callers can set a mode
+        unconditionally and compare backends apples-to-apples.
+
+        ``sched`` / ``lowering`` optionally supply prebuilt compile
+        artifacts (the session layer's content-hash cache skips
+        re-scheduling and re-lowering on repeated programs).  Backends
+        that interpret per-op ignore both.
         """
+        if mode not in ("fused", "megakernel"):
+            raise ValueError(f"unknown run_fused mode {mode!r}")
         return self.run(program, state)
 
     def _exec_op(self, op, state: jax.Array) -> jax.Array:

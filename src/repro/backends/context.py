@@ -64,6 +64,9 @@ class ExecutionContext:
 
     * ``interpret`` — Pallas interpret mode (CPU) vs compiled TPU,
     * ``block_r`` / ``block_c`` — VPU tile geometry for bulk kernels,
+    * ``vmem_budget_bytes`` — on-chip working-set ceiling the megakernel
+      executor's column planner blocks against
+      (:func:`repro.compile.megakernel.plan_vmem`),
     * ``subarray_cols`` — behavioural-sim row width (bits),
     * ``seed`` — stable-mask RNG seed: the chip / row-group identity;
       sweeps treat distinct seeds as distinct tested chips.
@@ -82,6 +85,7 @@ class ExecutionContext:
     interpret: bool = True
     block_r: int = 8
     block_c: int = 512
+    vmem_budget_bytes: int = 8 * 2**20
     subarray_cols: int = 1024
     seed: int = 0
 

@@ -13,6 +13,10 @@ with the :mod:`repro.compile` schedule — every dependency level of the
 program becomes at most one MAJX dispatch (mixed arities padded with
 constant 0/1 plane pairs, an exact identity) plus at most one
 Multi-RowCopy dispatch, while NOT/COPY levels are pure gather/scatter.
+``run_fused(mode="megakernel")`` goes further: the whole schedule
+lowers to static level tables (:mod:`repro.compile.megakernel`) that
+ONE ``pallas_call`` scans end-to-end, VMEM-resident, column-blocked
+against ``Capabilities.vmem_budget_bytes`` when the image is too wide.
 ``self.dispatch_count`` tracks real kernel launches, which is the
 structural metric ``benchmarks/bench.py`` and the CI perf gate assert
 on.
@@ -50,6 +54,8 @@ class PallasBackend(Backend):
             max_majx=1_000_000,
             n_act_levels=cal.N_ACT_LEVELS,
             native_batch=True,
+            megakernel=True,
+            vmem_budget_bytes=self.ctx.vmem_budget_bytes,
         )
 
     def majx(self, planes: jax.Array, x: Optional[int] = None,
@@ -82,17 +88,26 @@ class PallasBackend(Backend):
 
     # ------------------------------------------------- fused program path
     def run_fused(self, program: Program, state: jax.Array, *,
-                  sched=None) -> jax.Array:
+                  sched=None, mode: str = "fused",
+                  lowering=None) -> jax.Array:
         """Level-batched program execution (see module docstring).
 
         Reads sample the level-entry state and writes commit at level
         exit, matching the hazard model the scheduler levels against;
         WAW leveling guarantees the per-level scatters hit disjoint
-        rows.  A prebuilt ``sched`` (the session compile cache) skips
-        the scheduling pass entirely.
+        rows.  Prebuilt ``sched`` / ``lowering`` artifacts (the session
+        compile cache) skip the scheduling and lowering passes entirely.
+
+        ``mode="megakernel"`` routes to :meth:`run_megakernel` — the
+        whole schedule in one dispatch.
         """
         from repro.compile.schedule import build_schedule
 
+        if mode == "megakernel":
+            return self.run_megakernel(program, state, sched=sched,
+                                       lowering=lowering)
+        if mode != "fused":
+            raise ValueError(f"unknown run_fused mode {mode!r}")
         if sched is None:
             sched = build_schedule(program)
         state = jnp.asarray(state, jnp.uint32)
@@ -101,6 +116,35 @@ class PallasBackend(Backend):
             for group in level:
                 state = self._exec_group(group, entry, state)
         return state
+
+    def run_megakernel(self, program: Program, state: jax.Array, *,
+                       sched=None, lowering=None) -> jax.Array:
+        """The whole schedule in ONE Pallas dispatch.
+
+        Lowers the program's Schedule to static level tables
+        (:mod:`repro.compile.megakernel`), plans VMEM column blocking
+        against ``ctx.vmem_budget_bytes``, and scans every level inside
+        a single ``pallas_call``.  Value-neutral programs (no write
+        slots) are the identity at zero dispatches — there is nothing
+        to launch, matching what the empty fused walk does.
+        """
+        from repro.compile.megakernel import lower_schedule, plan_vmem
+        from repro.compile.schedule import build_schedule
+        from repro.kernels.megakernel.ops import run_lowering
+
+        if lowering is None:
+            if sched is None:
+                sched = build_schedule(program)
+            lowering = lower_schedule(sched)
+        state = jnp.asarray(state, jnp.uint32)
+        if lowering.n_levels == 0 or lowering.w_max == 0:
+            return state
+        rows, words = state.shape
+        plan = plan_vmem(lowering, rows, words, self.ctx.vmem_budget_bytes,
+                         block_r=self.ctx.block_r)
+        self.dispatch_count += 1
+        return run_lowering(lowering, state, block_c=plan.block_c,
+                            interpret=self.ctx.interpret)
 
     def _exec_group(self, group, entry: jax.Array,
                     state: jax.Array) -> jax.Array:

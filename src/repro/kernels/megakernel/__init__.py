@@ -1,0 +1,14 @@
+"""Megakernel: one Pallas dispatch executes a whole fused Schedule.
+
+Lowered level tables come from :mod:`repro.compile.megakernel`; the
+kernel here scans them inside a single ``pallas_call`` (word-packed
+MAJX votes, identity-vote row copies, complement via XOR) with the
+bit-plane state resident in VMEM.  ``ops.run_lowering`` is the public
+entry the ``pallas`` backend dispatches; ``ref.schedule_exec_ref`` is
+the pure-numpy oracle the differential tests compare against.
+"""
+
+from repro.kernels.megakernel.ops import run_lowering
+from repro.kernels.megakernel.ref import schedule_exec_ref
+
+__all__ = ["run_lowering", "schedule_exec_ref"]

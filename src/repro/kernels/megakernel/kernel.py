@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: scan a Schedule's level tables in ONE dispatch.
+
+The per-level executor costs one kernel launch per dependency level;
+this kernel runs *every* level of a lowered
+:class:`~repro.compile.megakernel.MegaLowering` inside a single
+``pallas_call``.  The three level tables (operand indices, destination
+rows, complement flags) are staged as scalar-prefetch metadata — they
+are index/control data, not bit-planes — and ``lax.scan`` walks the
+level axis with the packed ``uint32`` state block carried through VMEM.
+
+One level is one unified primitive:
+
+    gather (W, X) operand rows  ->  bit-sliced CSA majority over X
+    ->  XOR with the slot's complement mask  ->  scatter to W rows
+
+reusing the word-packed carry-save counter of the standalone MAJX
+kernel (:mod:`repro.kernels.majx.kernel`): the VPU computes 32 bitlines
+per word lane per op, the same bulk geometry as the DRAM subarray, and
+votes run on packed words — never unpacked bool planes.
+
+Every op is bitwise per packed word, so word columns are independent:
+the grid tiles the word axis, and when the image is wider than one
+VMEM-budgeted block the Pallas pipeline streams column slabs through
+its double-buffered HBM fetches.  Grid steps are not dispatches — the
+launch count stays 1 either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.majx.kernel import _csa_accumulate, _ge_threshold
+
+
+def schedule_kernel(src_ref, dst_ref, inv_ref, x_ref, o_ref, *, x: int):
+    """Execute all levels against one (rows_aug, block_c) column slab."""
+    state = x_ref[...]
+    w = src_ref.shape[1]
+    bc = state.shape[-1]
+
+    def level(st, tables):
+        srcs, dsts, invs = tables              # (W, X), (W,), (W,)
+        # Gather samples the level-entry state; the single scatter below
+        # commits at level exit — WAW leveling guarantees disjoint rows.
+        ops = jnp.take(st, srcs.reshape(-1), axis=0).reshape(w, x, bc)
+        digits = _csa_accumulate([ops[:, i, :] for i in range(x)])
+        vote = _ge_threshold(digits, (x + 1) // 2)
+        # invs is 0/1; 0 - 1 == all-ones in uint32, so this is the NOT
+        # slots' complement and a no-op everywhere else.
+        vote = vote ^ (jnp.uint32(0) - invs)[:, None]
+        return st.at[dsts].set(vote), None
+
+    final, _ = jax.lax.scan(
+        level, state, (src_ref[...], dst_ref[...], inv_ref[...]))
+    o_ref[...] = final
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("x", "block_c", "interpret"))
+def schedule_pallas(
+    src: jax.Array,
+    dst: jax.Array,
+    inv: jax.Array,
+    state: jax.Array,
+    *,
+    x: int,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """One dispatch over an augmented (rows_aug, C) uint32 image.
+
+    ``src``/``dst``/``inv`` are the (n_levels, w_max[, x_max]) tables of
+    a :class:`~repro.compile.megakernel.MegaLowering`; ``rows_aug`` and
+    ``C`` must already be padded to the (block_r, block_c) tile (see
+    ``ops.run_lowering``).  Programs with the same table *shapes* share
+    one compilation — the tables themselves are traced operands.
+    """
+    rows_aug, c = state.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(pl.cdiv(c, block_c),),
+        in_specs=[pl.BlockSpec((rows_aug, block_c), lambda j, *_: (0, j))],
+        out_specs=pl.BlockSpec((rows_aug, block_c), lambda j, *_: (0, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(schedule_kernel, x=x),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_aug, c), jnp.uint32),
+        interpret=interpret,
+    )(src, dst, inv, state)

@@ -1,0 +1,66 @@
+"""Host-side wrapper: run a MegaLowering against a bit-plane image.
+
+``run_lowering`` builds the augmented image (three constant rows in
+front of the program rows, see :mod:`repro.compile.megakernel`), pads
+it to the VPU tile, launches :func:`repro.kernels.megakernel.kernel.
+schedule_pallas` exactly once, and crops the program rows back out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compile.megakernel import MegaLowering, N_CONST_ROWS, ONE_ROW
+from repro.kernels.megakernel.kernel import schedule_pallas
+from repro.kernels.tiling import VPU_LANES, VPU_SUBLANES, clamp_block_c
+
+
+def run_lowering(
+    lowering: MegaLowering,
+    state: jax.Array,
+    *,
+    block_c: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Execute lowered level tables on a (rows, words) uint32 image.
+
+    One Pallas dispatch regardless of level count or of how many
+    ``block_c``-wide column slabs the grid streams.  Rows beyond what
+    the lowering addresses ride along untouched (they are gathered
+    never, scattered never); an empty lowering is the identity.
+    """
+    state = jnp.asarray(state, jnp.uint32)
+    rows, words = state.shape
+    if lowering.n_levels == 0 or lowering.w_max == 0:
+        return state
+    if lowering.n_rows > rows:
+        raise ValueError(
+            f"lowering addresses {lowering.n_rows} rows but state has "
+            f"only {rows}")
+
+    block_c = clamp_block_c(block_c)
+    rows_aug = -(-(rows + N_CONST_ROWS) // VPU_SUBLANES) * VPU_SUBLANES
+    cols = -(-words // block_c) * block_c
+    aug = jnp.zeros((rows_aug, cols), jnp.uint32)
+    # The ones row spans the full padded width so MAJ padding stays
+    # exact in the ragged last column block.
+    aug = aug.at[ONE_ROW].set(jnp.uint32(0xFFFFFFFF))
+    aug = aug.at[N_CONST_ROWS:N_CONST_ROWS + rows, :words].set(state)
+
+    out = schedule_pallas(
+        jnp.asarray(lowering.src),
+        jnp.asarray(lowering.dst),
+        jnp.asarray(lowering.inv),
+        aug,
+        x=int(lowering.x_max),
+        block_c=block_c,
+        interpret=interpret,
+    )
+    return out[N_CONST_ROWS:N_CONST_ROWS + rows, :words]
+
+
+def pick_block_c(words: int, budget_block_c: int) -> int:
+    """Snap a planner-chosen block width onto the wrapper's clamp rule."""
+    cols = -(-words // VPU_LANES) * VPU_LANES
+    return clamp_block_c(min(budget_block_c, cols))

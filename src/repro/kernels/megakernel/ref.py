@@ -1,0 +1,39 @@
+"""Pure-numpy oracle for lowered level tables.
+
+Executes a :class:`~repro.compile.megakernel.MegaLowering` against a
+program-rows state image with per-slot python loops — deliberately the
+dumbest possible interpretation of the tables, so the differential
+tests can separate *lowering* bugs (tables disagree with the Program)
+from *kernel* bugs (the Pallas scan disagrees with its own tables).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.compile.megakernel import MegaLowering, N_CONST_ROWS, ONE_ROW
+
+
+def schedule_exec_ref(lowering: MegaLowering, state: np.ndarray) -> np.ndarray:
+    """Run the level tables on a (rows, words) uint32 image, per slot."""
+    state = np.asarray(state, np.uint32)
+    rows, words = state.shape
+    aug = np.zeros((rows + N_CONST_ROWS, words), np.uint32)
+    aug[ONE_ROW] = np.uint32(0xFFFFFFFF)
+    aug[N_CONST_ROWS:] = state
+    for li in range(lowering.n_levels):
+        entry = aug.copy()
+        for w in range(lowering.w_max):
+            operands = entry[lowering.src[li, w]]          # (x_max, words)
+            # Bit-position majority, the slow-but-obvious way: unpack to
+            # individual bits, count votes, repack.
+            bits = (operands[:, :, None] >>
+                    np.arange(32, dtype=np.uint32)) & np.uint32(1)
+            vote_bits = (bits.sum(axis=0, dtype=np.int64) * 2
+                         > lowering.x_max).astype(np.uint64)
+            vote = (vote_bits << np.arange(32, dtype=np.uint64)) \
+                .sum(axis=-1).astype(np.uint32)
+            if lowering.inv[li, w]:
+                vote = ~vote
+            aug[lowering.dst[li, w]] = vote
+    return aug[N_CONST_ROWS:]

@@ -20,6 +20,14 @@ by a lock (build included), so N concurrent submissions of one program
 shape are exactly 1 miss + N-1 hits — never N racing builds.
 ``stats`` records hits/misses; the bench harnesses report the hit rate
 in ``BENCH_fused.json`` / ``BENCH_serve.json``.
+
+Megakernel artifacts cache under the *same* content key: a
+:class:`~repro.compile.megakernel.MegaLowering` is a pure function of
+the schedule, which is a pure function of program content, so
+:meth:`CompileCache.lowering_for` keys its table store by
+``program_key`` too.  Lowerings keep separate ``lowering_stats`` —
+schedule hit/miss counts are load-bearing in the serve tests and must
+not move when a consumer opts into megakernel mode.
 """
 
 from __future__ import annotations
@@ -28,10 +36,13 @@ import collections
 import dataclasses
 import hashlib
 import threading
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 from repro.compile.schedule import Schedule, build_schedule
 from repro.pud.isa import Program
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard for hints only
+    from repro.compile.megakernel import MegaLowering
 
 
 def program_key(program: Program) -> str:
@@ -68,12 +79,20 @@ class CacheStats:
 
 
 class CompileCache:
-    """LRU cache: ``program_key`` -> built :class:`Schedule`."""
+    """LRU cache: ``program_key`` -> built :class:`Schedule`.
+
+    A second LRU store under the same keys holds megakernel
+    :class:`~repro.compile.megakernel.MegaLowering` tables
+    (:meth:`lowering_for`), with its own ``lowering_stats`` window.
+    """
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self.stats = CacheStats()
+        self.lowering_stats = CacheStats()
         self._entries: collections.OrderedDict[str, Schedule] = \
+            collections.OrderedDict()
+        self._lowerings: "collections.OrderedDict[str, MegaLowering]" = \
             collections.OrderedDict()
         self._lock = threading.RLock()
 
@@ -102,3 +121,31 @@ class CompileCache:
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
             return sched
+
+    def lowering_for(self, program: Program, key: Optional[str] = None,
+                     sched: Optional[Schedule] = None) -> "MegaLowering":
+        """The program's megakernel level tables — cached by content.
+
+        Resolves the schedule through :meth:`schedule_for` first (the
+        lock is re-entrant, so this is one serialized pass) unless the
+        caller hands one in.  Hits/misses land on ``lowering_stats``,
+        never on ``stats`` — schedule-cache accounting is unchanged by
+        megakernel execution.
+        """
+        from repro.compile.megakernel import lower_schedule
+
+        key = key or program_key(program)
+        with self._lock:
+            low = self._lowerings.get(key)
+            if low is not None:
+                self._lowerings.move_to_end(key)
+                self.lowering_stats.hits += 1
+                return low
+            self.lowering_stats.misses += 1
+            if sched is None:
+                sched = self.schedule_for(program, key=key)
+            low = lower_schedule(sched)
+            self._lowerings[key] = low
+            while len(self._lowerings) > self.maxsize:
+                self._lowerings.popitem(last=False)
+            return low

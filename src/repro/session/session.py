@@ -94,17 +94,29 @@ class DramSession:
         self._validate(program, state, program_key(program))
         return self.backend.run(program, state)
 
-    def run_fused(self, program: Program, state) -> jax.Array:
+    def run_fused(self, program: Program, state, *,
+                  mode: str = "fused") -> jax.Array:
         """Fused execution: validate, resolve the cached schedule, run.
 
         Bit-identical to :meth:`run` on every backend; batch-native
-        backends execute one kernel dispatch per schedule group.  A
-        repeated program is a cache hit — no re-scheduling.
+        backends execute one kernel dispatch per schedule group — or,
+        with ``mode="megakernel"``, ONE dispatch for the whole program
+        (backends that don't advertise the capability fall back to
+        their exact path, see ``Backend.run_fused``).  A repeated
+        program is a cache hit — no re-scheduling; in megakernel mode
+        the lowered level tables cache under the same content key (with
+        their own ``cache.lowering_stats`` window, so schedule-cache
+        accounting is mode-independent).
         """
         key = program_key(program)
         self._validate(program, state, key)
         sched = self.cache.schedule_for(program, key=key)
-        return self.backend.run_fused(program, state, sched=sched)
+        lowering = None
+        if mode == "megakernel" and self.capabilities().megakernel:
+            lowering = self.cache.lowering_for(program, key=key,
+                                               sched=sched)
+        return self.backend.run_fused(program, state, sched=sched,
+                                      mode=mode, lowering=lowering)
 
     # --------------------------------------------- §8.1 compiled arithmetic
     def elementwise(self, op: str, a, b, tier: Optional[int] = None,

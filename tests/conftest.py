@@ -9,3 +9,68 @@ sys.path.insert(0, os.path.dirname(__file__))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+import numpy as np
+import pytest
+
+# --------------------------------------------------------------------------
+# Shared serve-layer factories.  test_serve_service.py and
+# test_serve_system.py each grew a private copy of these builders; they
+# live here once so the construction defaults (smoke configs, tiny param
+# trees, oracle backend) stay in lockstep across suites.
+
+
+@pytest.fixture
+def make_pud_service():
+    """Factory: ``make_pud_service(backend="oracle", **cfg_kw)`` ->
+    a fresh :class:`repro.serve.PudService` over a ServiceConfig."""
+    from repro.serve import PudService, ServiceConfig
+
+    def build(backend: str = "oracle", **cfg_kw) -> "PudService":
+        return PudService(ServiceConfig(backend=backend, **cfg_kw))
+
+    return build
+
+
+@pytest.fixture
+def make_tiny_pud_engine():
+    """Factory: a 2-tensor-param Engine for PUD-integrity tests.
+
+    Returns ``(engine, params)`` — the params dict is the ground truth
+    the heal/verify assertions compare against.  Keyword args pass
+    through to ``Engine`` (``pud_backend=``, ``pud_ctx=``,
+    ``pud_service=``, ``strict_integrity=``, ``tenant=`` ...).
+    """
+    from repro.configs.registry import get_config
+    from repro.serve.engine import Engine
+
+    def build(**kw):
+        params = {
+            "w": np.linspace(-1, 1, 32, dtype=np.float32).reshape(4, 8),
+            "b": np.arange(6, dtype=np.float32),
+        }
+        return Engine(params, get_config("xlstm-125m", smoke=True),
+                      **kw), params
+
+    return build
+
+
+@pytest.fixture
+def make_lm_engine():
+    """Factory: a smoke-config LM Engine with freshly-initialised params.
+
+    ``make_lm_engine("chatglm3-6b", max_seq=64)`` returns
+    ``(engine, cfg)``; ``seed`` keys ``M.init``.  Keyword args pass
+    through to ``Engine``.
+    """
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+
+    def build(config_name: str = "chatglm3-6b", seed: int = 0,
+              max_seq: int = 64, **kw):
+        cfg = get_config(config_name, smoke=True)
+        params, _ = M.init(jax.random.PRNGKey(seed), cfg)
+        return Engine(params, cfg, max_seq=max_seq, **kw), cfg
+
+    return build

@@ -6,12 +6,16 @@ execution::
     PYTHONPATH=src:tests python tests/golden/generate.py
 
 Each fixture freezes (a) a canonical serialized Program, (b) the seed of
-its random initial (rows, words) state, and (c) the expected final state
-computed by the per-op oracle interpreter.  tests/test_compile_golden.py
-replays every fixture through per-op and fused execution on all
-backends: a scheduler change that reorders ops but alters results fails
-loudly against these bytes.  Review regenerated diffs op-by-op — a
-changed ``expected`` row means changed semantics, not formatting.
+its random initial (rows, words) state, (c) the expected final state
+computed by the per-op oracle interpreter, and (d) a ``megakernel``
+section pinning the lowered level-table structure (shapes, per-level
+slot counts, content digest) plus a digest of the expected final state.
+tests/test_compile_golden.py replays every fixture through per-op,
+fused, and megakernel execution on all backends: a scheduler or
+lowering change that reorders ops but alters results — or silently
+repacks the tables — fails loudly against these bytes.  Review
+regenerated diffs op-by-op — a changed ``expected`` row means changed
+semantics, not formatting.
 """
 
 from __future__ import annotations
@@ -85,6 +89,24 @@ FIXTURES = {
 }
 
 
+def _megakernel_section(prog, final: np.ndarray) -> dict:
+    """Freeze the lowered level-table structure + final-state digest."""
+    import hashlib
+
+    from repro.compile import build_schedule, lower_schedule
+
+    low = lower_schedule(build_schedule(prog))
+    return {
+        "n_levels": low.n_levels,
+        "w_max": low.w_max,
+        "x_max": low.x_max,
+        "level_meta": [list(c) for c in low.level_meta],
+        "table_digest": low.digest(),
+        "final_digest": hashlib.sha256(
+            np.ascontiguousarray(final).tobytes()).hexdigest(),
+    }
+
+
 def main() -> None:
     from repro.backends import ExecutionContext, get_backend
 
@@ -104,6 +126,7 @@ def main() -> None:
             "words": WORDS,
             "ops": json.loads(prog.to_json()),
             "expected": ["".join(f"{w:08x}" for w in row) for row in final],
+            "megakernel": _megakernel_section(prog, final),
         }
         path = os.path.join(out_dir, f"{name}.json")
         with open(path, "w") as f:

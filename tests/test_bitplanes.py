@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _proptest import rand_bits, rand_u32, sweep
 from repro.core import bitplanes as bp
@@ -82,3 +83,61 @@ def test_bitcast_roundtrip_dtypes():
         back = bp.bitcast_from_planes(w, sh, dt)
         assert back.dtype == x.dtype and back.shape == x.shape
         assert (np.asarray(back) == np.asarray(x)).all(), dtype
+
+
+# ----------------------------------------------------- word boundaries
+# The packing layout changes representation exactly at multiples of 32
+# (one uint32 word per 32 logical bits); every edge below sits on, just
+# under, or just over a boundary, where an off-by-one in the pad/crop
+# arithmetic would silently truncate or alias bits.
+
+WORD_EDGES = (1, 31, 32, 33, 1024)
+
+
+@pytest.mark.parametrize("n_bits", WORD_EDGES)
+def test_pack_unpack_word_boundary(n_bits):
+    rng = np.random.default_rng(n_bits)
+    bits = rand_bits(rng, 2, n_bits)
+    words = bp.pack(bits)
+    assert words.shape == (2, bp.n_words(n_bits))
+    assert (np.asarray(bp.unpack(words, n_bits)) == bits).all()
+    # Pad bits beyond n_bits must be zero, not residue of the input.
+    tail = np.asarray(bp.unpack(words, bp.n_words(n_bits) * 32))
+    assert not tail[:, n_bits:].any()
+
+
+@pytest.mark.parametrize("k", WORD_EDGES)
+def test_pack_uint_elements_word_boundary(k):
+    rng = np.random.default_rng(k)
+    x = rand_u32(rng, k)
+    planes = bp.pack_uint_elements(jnp.asarray(x))
+    assert planes.shape == (32, bp.n_words(k))
+    assert (np.asarray(bp.unpack_uint_elements(planes, k)) == x).all()
+
+
+@pytest.mark.parametrize("n_bits", WORD_EDGES)
+def test_pack_uint_elements_narrow_width(n_bits):
+    """Element widths at word edges: values must survive a pack at
+    width min(n_bits, 32) when they fit in that many bits."""
+    width = min(n_bits, 32)
+    rng = np.random.default_rng(n_bits + 7)
+    x = rand_u32(rng, 40) >> np.uint32(32 - width)
+    planes = bp.pack_uint_elements(jnp.asarray(x), n_bits=width)
+    assert planes.shape == (width, bp.n_words(40))
+    assert (np.asarray(bp.unpack_uint_elements(planes, 40)) == x).all()
+
+
+@pytest.mark.parametrize("n_elem", WORD_EDGES)
+def test_bitcast_word_boundary_element_counts(n_elem):
+    """Sub-word dtypes pad to whole uint32 words; every edge count must
+    round-trip without truncation or stray tail bytes."""
+    rng = np.random.default_rng(n_elem)
+    for dtype in (jnp.uint8, jnp.float16, jnp.float32):
+        x = jnp.asarray(
+            rng.integers(0, 200, n_elem), jnp.uint32).astype(dtype)
+        w, sh, dt = bp.bitcast_to_planes(x)
+        assert w.dtype == jnp.uint32
+        assert w.size == bp.n_words(n_elem * 8 * jnp.dtype(dtype).itemsize)
+        back = bp.bitcast_from_planes(w, sh, dt)
+        assert back.shape == (n_elem,)
+        assert (np.asarray(back) == np.asarray(x)).all(), (n_elem, dtype)

@@ -5,10 +5,14 @@ adders, MAJ5/7/9 reduction trees, fan-out-31 Multi-RowCopy waves) with
 their expected output bitplanes under fixed seeds — regenerate with
 ``tests/golden/generate.py`` only on intentional semantic changes.  A
 scheduler change that reorders ops but alters results fails here loudly,
-on every backend and on both execution paths.
+on every backend and on all three execution paths (per-op, fused,
+megakernel); each fixture additionally pins the megakernel lowering's
+level-table structure and content digest, so a silent repacking of the
+tables fails even when the final state happens to agree.
 """
 
 import glob
+import hashlib
 import json
 import os
 
@@ -17,7 +21,7 @@ import numpy as np
 import pytest
 
 from repro.backends import ExecutionContext, get_backend
-from repro.compile import build_schedule
+from repro.compile import build_schedule, lower_schedule
 from repro.pud.isa import Program
 
 IDEAL = ExecutionContext(ideal=True)
@@ -60,6 +64,8 @@ def test_golden_program_all_backends_both_paths(path):
         for mode, run in (("per_op", be.run), ("fused", be.run_fused)):
             got = np.asarray(run(prog, state))
             assert (got == expected).all(), (doc["name"], name, mode)
+        got = np.asarray(be.run_fused(prog, state, mode="megakernel"))
+        assert (got == expected).all(), (doc["name"], name, "megakernel")
 
 
 @pytest.mark.parametrize(
@@ -76,6 +82,38 @@ def test_golden_fused_dispatch_budget(path):
     assert pal.dispatch_count == sched.n_dispatches()
     assert pal.dispatch_count <= sched.n_levels or sched.n_levels == 0
     assert sched.n_dispatches() <= sched.per_op_dispatches()
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[os.path.basename(p)[:-5]
+                               for p in GOLDEN_FILES])
+def test_golden_megakernel_lowering_structure(path):
+    """The frozen level-table structure: shapes, per-level slot counts,
+    and the byte-level table digest must reproduce exactly."""
+    doc, prog, _, expected = _load(path)
+    frozen = doc["megakernel"]
+    low = lower_schedule(build_schedule(prog))
+    assert low.n_levels == frozen["n_levels"]
+    assert low.w_max == frozen["w_max"]
+    assert low.x_max == frozen["x_max"]
+    assert [list(c) for c in low.level_meta] == frozen["level_meta"]
+    assert low.digest() == frozen["table_digest"]
+    assert hashlib.sha256(
+        np.ascontiguousarray(expected).tobytes()).hexdigest() \
+        == frozen["final_digest"]
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[os.path.basename(p)[:-5]
+                               for p in GOLDEN_FILES])
+def test_golden_megakernel_is_one_dispatch(path):
+    _, prog, state, expected = _load(path)
+    pal = get_backend("pallas", IDEAL)
+    with pal.count_dispatches() as scope:
+        got = np.asarray(pal.run_fused(prog, jnp.asarray(state),
+                                       mode="megakernel"))
+    assert scope.count == 1
+    assert (got == expected).all()
 
 
 def test_serialization_roundtrip():

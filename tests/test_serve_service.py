@@ -25,8 +25,8 @@ from repro.backends import ExecutionContext, get_backend
 from repro.ft.straggler import StragglerDetector
 from repro.serve import (ArenaExhaustedError, DeadlineExceededError,
                          EraseRequest, HealRequest, IntegrityRequest,
-                         Priority, PudService, QueueFullError, RequestQueue,
-                         ServeError, ServiceConfig, SloMonitor)
+                         Priority, QueueFullError, RequestQueue,
+                         ServeError, SloMonitor)
 from repro.session import CompileCache, DramSession
 from test_session import valid_rand_program
 
@@ -59,13 +59,13 @@ def mixed_requests(seed, n_heal=3, n_erase=2, rows=2, words=8):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_coalesced_bit_exact_with_per_request(backend):
+def test_coalesced_bit_exact_with_per_request(make_pud_service, backend):
     """Same deterministic workload, coalescing on vs off, every backend:
     per-request results must be bit-identical (and match the oracle)."""
-    ref = PudService(ServiceConfig(backend="oracle", coalesce=True))
+    ref = make_pud_service(backend="oracle", coalesce=True)
     want = ref.serve(mixed_requests(seed=42))
     for coalesce in (True, False):
-        svc = PudService(ServiceConfig(backend=backend, coalesce=coalesce))
+        svc = make_pud_service(backend=backend, coalesce=coalesce)
         got = svc.serve(mixed_requests(seed=42))
         for w, g in zip(want, got):
             if hasattr(w, "healed"):
@@ -76,12 +76,12 @@ def test_coalesced_bit_exact_with_per_request(backend):
                 assert (np.asarray(g.wiped) == 0xDEADBEEF).all()
 
 
-def test_coalescing_cuts_dispatches_not_results():
+def test_coalescing_cuts_dispatches_not_results(make_pud_service):
     """pallas, structural: batching the same tick's heals+erases into
     fused groups must strictly reduce kernel launches."""
     counts = {}
     for coalesce in (True, False):
-        svc = PudService(ServiceConfig(backend="pallas", coalesce=coalesce))
+        svc = make_pud_service(backend="pallas", coalesce=coalesce)
         svc.serve(mixed_requests(seed=7, n_heal=4, n_erase=4))
         snap = svc.snapshot()
         counts[coalesce] = snap.dispatches
@@ -89,23 +89,23 @@ def test_coalescing_cuts_dispatches_not_results():
     assert counts[True] < counts[False], counts
 
 
-def test_heal_through_service_equals_backend_majx():
+def test_heal_through_service_equals_backend_majx(make_pud_service):
     """A single heal is exactly the backend's majority vote."""
     rng = np.random.default_rng(3)
     replicas = rand_u32(rng, 3, 2, 8)
-    svc = PudService(ServiceConfig(backend="pallas"))
+    svc = make_pud_service(backend="pallas")
     [res] = svc.serve([HealRequest(replicas=replicas)])
     want = np.asarray(get_backend("oracle", IDEAL).majx(replicas))
     assert (np.asarray(res.healed) == want).all()
     assert res.decision is not None  # offload verdict rides along
 
 
-def test_verify_request_counts_bits():
+def test_verify_request_counts_bits(make_pud_service):
     rng = np.random.default_rng(4)
     live = rand_u32(rng, 2, 8)
     ref = live.copy()
     ref[0, 0] ^= 0b101  # 2 flipped bits
-    svc = PudService(ServiceConfig(backend="oracle"))
+    svc = make_pud_service(backend="oracle")
     [res] = svc.serve([IntegrityRequest(live=live, reference=ref)])
     assert res.mismatch_bits == 2
     assert res.total_bits == live.size * 32
@@ -135,10 +135,10 @@ def test_concurrent_sessions_one_miss_rest_hits(backend):
         assert (out == want).all()
 
 
-def test_service_pool_shares_one_cache():
+def test_service_pool_shares_one_cache(make_pud_service):
     """Every pooled session holds the service's cache; a steady request
     shape is 1 miss + hits thereafter across the whole pool."""
-    svc = PudService(ServiceConfig(backend="pallas", pool_size=3))
+    svc = make_pud_service(backend="pallas", pool_size=3)
     assert all(s.cache is svc.cache for s in svc.sessions)
     for r in range(3):
         svc.serve(mixed_requests(seed=r, n_heal=2, n_erase=0))
@@ -152,8 +152,8 @@ def test_service_pool_shares_one_cache():
 # ------------------------------------------- admission & backpressure
 
 
-def test_queue_full_backpressure():
-    svc = PudService(ServiceConfig(backend="oracle", queue_depth=2))
+def test_queue_full_backpressure(make_pud_service):
+    svc = make_pud_service(backend="oracle", queue_depth=2)
     rng = np.random.default_rng(1)
     with pytest.raises(QueueFullError):
         svc.serve([heal_req(rng) for _ in range(3)])
@@ -163,16 +163,16 @@ def test_queue_full_backpressure():
         svc.tick()               # and remain servable after the rejection
 
 
-def test_tenant_queue_depth_cap():
-    svc = PudService(ServiceConfig(backend="oracle", tenant_queue_depth=1))
+def test_tenant_queue_depth_cap(make_pud_service):
+    svc = make_pud_service(backend="oracle", tenant_queue_depth=1)
     rng = np.random.default_rng(2)
     with pytest.raises(QueueFullError, match="tenant 'a'"):
         svc.serve([heal_req(rng, tenant="a"), heal_req(rng, tenant="a")])
 
 
-def test_arena_exhausted_and_released():
+def test_arena_exhausted_and_released(make_pud_service):
     # a (3, 2, words) heal needs (3+1)*2 = 8 arena rows
-    svc = PudService(ServiceConfig(backend="oracle", tenant_rows=8))
+    svc = make_pud_service(backend="oracle", tenant_rows=8)
     rng = np.random.default_rng(3)
     svc.serve([heal_req(rng, tenant="a")])
     arena = svc.admission.arena("a")
@@ -184,11 +184,11 @@ def test_arena_exhausted_and_released():
     assert snap["row_budget"] == 8
 
 
-def test_deadline_shedding():
+def test_deadline_shedding(make_pud_service):
     """A past-deadline request is load-shed at its tick: its slot holds
     the DeadlineExceededError, its arena rows are released, live work
     in the same tick completes normally."""
-    svc = PudService(ServiceConfig(backend="oracle"))
+    svc = make_pud_service(backend="oracle")
     rng = np.random.default_rng(4)
     late = heal_req(rng, tenant="late", deadline_s=-0.001)
     ok = heal_req(rng, tenant="ok")
@@ -201,8 +201,8 @@ def test_deadline_shedding():
     assert svc.admission.arena("late").rows_in_use == 0
 
 
-def test_shedding_disabled_runs_late_work():
-    svc = PudService(ServiceConfig(backend="oracle", shed_late=False))
+def test_shedding_disabled_runs_late_work(make_pud_service):
+    svc = make_pud_service(backend="oracle", shed_late=False)
     rng = np.random.default_rng(5)
     [res] = svc.serve([heal_req(rng, deadline_s=-0.001)])
     assert res.fixed_bits == 3
@@ -238,9 +238,9 @@ def test_request_validation():
 # --------------------------------------------------- async client API
 
 
-def test_async_submit_and_stop():
+def test_async_submit_and_stop(make_pud_service):
     async def drive():
-        svc = PudService(ServiceConfig(backend="oracle"))
+        svc = make_pud_service(backend="oracle")
         await svc.start()
         rng = np.random.default_rng(8)
         results = await asyncio.gather(
@@ -253,9 +253,9 @@ def test_async_submit_and_stop():
     assert svc.snapshot().completed == 4 and svc.backlog == 0
 
 
-def test_async_submit_shed_raises():
+def test_async_submit_shed_raises(make_pud_service):
     async def drive():
-        svc = PudService(ServiceConfig(backend="oracle"))
+        svc = make_pud_service(backend="oracle")
         await svc.start()
         rng = np.random.default_rng(9)
         try:
@@ -270,8 +270,8 @@ def test_async_submit_shed_raises():
 # ------------------------------------------------------- SLO snapshot
 
 
-def test_slo_snapshot_structure():
-    svc = PudService(ServiceConfig(backend="pallas", pool_size=2))
+def test_slo_snapshot_structure(make_pud_service):
+    svc = make_pud_service(backend="pallas", pool_size=2)
     for r in range(2):
         svc.serve(mixed_requests(seed=r, n_heal=4, n_erase=2))
     snap = svc.snapshot()
@@ -287,8 +287,8 @@ def test_slo_snapshot_structure():
     json.dumps(snap.to_dict())              # schema is JSON-serializable
 
 
-def test_reset_slo_rebases_cache_window():
-    svc = PudService(ServiceConfig(backend="oracle"))
+def test_reset_slo_rebases_cache_window(make_pud_service):
+    svc = make_pud_service(backend="oracle")
     svc.serve(mixed_requests(seed=0, n_heal=2, n_erase=0))  # the miss
     svc.reset_slo()
     assert svc.snapshot().completed == 0
@@ -326,19 +326,12 @@ def test_straggler_post_init_contract():
 
 
 # ------------------------------------- engine as a service client
+# (the tiny 2-tensor engine factory lives in conftest.py, shared with
+# the system suite)
 
 
-def _tiny_engine(**kw):
-    from repro.configs.registry import get_config
-    from repro.serve.engine import Engine
-
-    params = {"w": np.linspace(-1, 1, 32, dtype=np.float32).reshape(4, 8),
-              "b": np.arange(6, dtype=np.float32)}
-    return Engine(params, get_config("xlstm-125m", smoke=True), **kw), params
-
-
-def test_engine_heal_and_verify_through_service():
-    eng, params = _tiny_engine(pud_backend="pallas")
+def test_engine_heal_and_verify_through_service(make_tiny_pud_engine):
+    eng, params = make_tiny_pud_engine(pud_backend="pallas")
     bad = {k: v.copy() for k, v in params.items()}
     bad["w"][0, 0] = np.float32(99.0)  # silent corruption in one replica
     fixed = eng.heal_params([bad, params, params])
@@ -349,36 +342,36 @@ def test_engine_heal_and_verify_through_service():
     assert eng.service.snapshot().tenants["engine"]["completed"] == 2
 
 
-def test_engine_warns_on_non_ideal_context():
+def test_engine_warns_on_non_ideal_context(make_tiny_pud_engine):
     from repro.serve.engine import IntegrityContextWarning
 
-    eng, params = _tiny_engine(pud_backend="oracle",
+    eng, params = make_tiny_pud_engine(pud_backend="oracle",
                                pud_ctx=ExecutionContext(ideal=False))
     with pytest.warns(IntegrityContextWarning, match="non-ideal"):
         eng.heal_params([params, params, params])
 
 
-def test_engine_strict_integrity_raises():
+def test_engine_strict_integrity_raises(make_tiny_pud_engine):
     from repro.serve.engine import IntegrityContextError
 
-    eng, params = _tiny_engine(pud_backend="oracle",
+    eng, params = make_tiny_pud_engine(pud_backend="oracle",
                                pud_ctx=ExecutionContext(ideal=False),
                                strict_integrity=True)
     with pytest.raises(IntegrityContextError, match="fidelity studies"):
         eng.heal_params([params, params, params])
 
 
-def test_engine_ideal_context_is_silent():
-    eng, params = _tiny_engine(pud_backend="oracle")
+def test_engine_ideal_context_is_silent(make_tiny_pud_engine):
+    eng, params = make_tiny_pud_engine(pud_backend="oracle")
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         eng.heal_params([params, params, params])
 
 
-def test_engines_can_share_one_service():
-    svc = PudService(ServiceConfig(backend="pallas"))
-    a, params = _tiny_engine(pud_service=svc, tenant="engine-a")
-    b, _ = _tiny_engine(pud_service=svc, tenant="engine-b")
+def test_engines_can_share_one_service(make_pud_service, make_tiny_pud_engine):
+    svc = make_pud_service(backend="pallas")
+    a, params = make_tiny_pud_engine(pud_service=svc, tenant="engine-a")
+    b, _ = make_tiny_pud_engine(pud_service=svc, tenant="engine-b")
     assert a.service is svc and b.service is svc
     a.heal_params([params, params, params])
     b.heal_params([params, params, params])

@@ -1,8 +1,11 @@
-"""Serving engine + end-to-end system behaviour through the public API."""
+"""Serving engine + end-to-end system behaviour through the public API.
+
+Engine construction (smoke config + fresh ``M.init`` params) comes from
+the shared ``make_lm_engine`` factory in conftest.py.
+"""
 
 import numpy as np
 import jax
-import pytest
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config
@@ -12,10 +15,8 @@ from repro.serve.engine import Engine, Request
 from repro.train.trainer import Trainer, TrainerConfig
 
 
-def test_engine_generates_deterministically():
-    cfg = get_config("chatglm3-6b", smoke=True)
-    params, _ = M.init(jax.random.PRNGKey(0), cfg)
-    eng = Engine(params, cfg, max_seq=64)
+def test_engine_generates_deterministically(make_lm_engine):
+    eng, cfg = make_lm_engine("chatglm3-6b")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
                for _ in range(3)]
@@ -30,10 +31,8 @@ def test_engine_generates_deterministically():
         assert len(a.out_tokens) == 6
 
 
-def test_engine_continuous_batching_mixed_lengths():
-    cfg = get_config("chatglm3-6b", smoke=True)
-    params, _ = M.init(jax.random.PRNGKey(0), cfg)
-    eng = Engine(params, cfg, max_seq=64)
+def test_engine_continuous_batching_mixed_lengths(make_lm_engine):
+    eng, cfg = make_lm_engine("chatglm3-6b")
     rng = np.random.default_rng(1)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size,
@@ -45,17 +44,16 @@ def test_engine_continuous_batching_mixed_lengths():
     assert all(len(r.out_tokens) == 4 for r in done)
 
 
-def test_engine_greedy_matches_forward():
+def test_engine_greedy_matches_forward(make_lm_engine):
     """Engine's first sampled token == argmax of the teacher-forced logits."""
-    cfg = get_config("gemma-7b", smoke=True)
-    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    eng, cfg = make_lm_engine("gemma-7b", max_seq=32)
     rng = np.random.default_rng(2)
     prompt = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
     import jax.numpy as jnp
 
-    logits, _ = M.forward(params, {"tokens": jnp.asarray(prompt[None])}, cfg)
+    logits, _ = M.forward(eng.params,
+                          {"tokens": jnp.asarray(prompt[None])}, cfg)
     want = int(jnp.argmax(logits[0, -1]))
-    eng = Engine(params, cfg, max_seq=32)
     out = eng.generate([Request(rid=0, prompt=prompt, max_new_tokens=1)])
     assert int(out[0].out_tokens[0]) == want
 
