@@ -28,7 +28,7 @@ from repro.core import power as pw
 from repro.core.errormodel import ErrorModel
 from repro.pud import latency as lat
 from repro.pud.secure_erase import destruction_time_ns, speedup_over_rowclone
-from repro.sweep import default_root, presets, records_for
+from repro.sweep import default_root, presets, records_for, run_adaptive
 
 #: Sweep record stores for the figure grids (resumable across runs;
 #: repo-relative default shared with the CLI and make_tables).
@@ -93,6 +93,27 @@ def fig6_maj3_timing():
                   key=lambda r: (order[(r["t1"], r["t2"])], r["n_act"]))
     return [(f"fig6_maj3_n{r['n_act']}_t1_{r['t1']}_t2_{r['t2']}", 0.0,
              f"success={r['success']:.4f}") for r in recs]
+
+
+def fig6_cliff_adaptive():
+    """Obs 7 cliff located by boundary search instead of a dense ladder.
+
+    Runs the adaptive smoke campaign (20-step t1 ladder, MAJ3@32) and
+    reports each threshold bracket plus the point economy — the
+    fraction of the dense ladder the search actually executed.  The
+    store is shared with dense runs of the same spec, so records here
+    are byte-identical to a grid campaign's.
+    """
+    result = run_adaptive(presets.adaptive_smoke_spec(), root=SWEEP_ROOT)
+    rows = []
+    for c in result.crossings:
+        if not c.crossed:
+            continue
+        rows.append((f"fig6_cliff_t1_at_{c.threshold:g}", 0.0,
+                     f"bracket={c.lo_value[0]:g}..{c.hi_value[0]:g}ns"))
+    rows.append(("fig6_cliff_economy", 0.0,
+                 f"probed={result.n_probed}/{result.n_grid_points}"))
+    return rows
 
 
 # Fig 7: MAJX x data pattern ----------------------------------------------

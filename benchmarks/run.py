@@ -26,6 +26,7 @@ def main() -> None:
         pf.fig4_simra_temp_vpp,
         pf.fig5_power,
         pf.fig6_maj3_timing,
+        pf.fig6_cliff_adaptive,
         pf.fig7_majx_patterns,
         pf.fig8_majx_temperature,
         pf.fig9_majx_voltage,

@@ -14,6 +14,60 @@ PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet
 PYTHONPATH=src python -m repro.sweep.run --smoke --root "$SWEEP_CI_ROOT" --quiet --expect-cached
 rm -rf "$SWEEP_CI_ROOT"
 
+echo "== adaptive smoke: boundary search economy + grid parity + resume =="
+ADAPT_CI_ROOT=$(mktemp -d)
+PYTHONPATH=src python - "$ADAPT_CI_ROOT" <<'PY'
+import filecmp, os, sys
+
+from repro.sweep import presets, run_adaptive, run_sweep
+
+root = sys.argv[1]
+aspec = presets.adaptive_smoke_spec()
+
+dense = run_sweep(aspec.base, os.path.join(root, "dense"))
+adaptive = run_adaptive(aspec, os.path.join(root, "adaptive"))
+
+# Economy gate: the boundary search must consult <= 40% of the ladder.
+assert adaptive.points_covered <= 0.4 * adaptive.n_grid_points, \
+    (adaptive.points_covered, adaptive.n_grid_points)
+
+# Cliff parity: each located bracket must match a dense first-below scan.
+by_idx = {r["index"]: r["success"] for r in dense.records}
+ladder = sorted(by_idx)
+for c in adaptive.crossings:
+    assert c.crossed and c.direction == "falling", c
+    first_below = next(i for i in ladder if by_idx[i] < c.threshold)
+    assert (c.lo_index, c.hi_index) == (first_below - 1, first_below), \
+        (c, first_below)
+
+# Store parity: every chunk file both modes produced is byte-identical.
+d_dir = os.path.join(dense.store_path, "chunks")
+a_dir = os.path.join(adaptive.store_path, "chunks")
+chunk_files = sorted(set(os.listdir(d_dir)) & set(os.listdir(a_dir)))
+assert chunk_files, (os.listdir(d_dir), os.listdir(a_dir))
+for f in chunk_files:
+    assert filecmp.cmp(os.path.join(d_dir, f), os.path.join(a_dir, f),
+                       shallow=False), f
+
+print(f"adaptive gate OK: {adaptive.points_covered}/"
+      f"{adaptive.n_grid_points} points probed, "
+      f"{len(adaptive.crossings)} crossings match dense scan, "
+      f"{len(chunk_files)} shared chunk files byte-identical")
+PY
+# identical campaign, second invocation: the search must replay entirely
+# from the store (zero chunks executed).
+PYTHONPATH=src python -m repro.sweep.run --adaptive \
+    --root "$ADAPT_CI_ROOT/adaptive" --quiet --expect-cached
+rm -rf "$ADAPT_CI_ROOT"
+
+echo "== fault-tolerant sweep smoke (elastic workers) =="
+FT_CI_ROOT=$(mktemp -d)
+PYTHONPATH=src python -m repro.sweep.run --smoke --workers 3 \
+    --root "$FT_CI_ROOT" --quiet
+PYTHONPATH=src python -m repro.sweep.run --smoke --workers 3 \
+    --root "$FT_CI_ROOT" --quiet --expect-cached
+rm -rf "$FT_CI_ROOT"
+
 echo "== program-fusion differential + golden + megakernel suites =="
 PYTHONPATH=src python -m pytest -x -q tests/test_compile_differential.py \
     tests/test_compile_golden.py tests/test_megakernel_differential.py

@@ -12,12 +12,72 @@ model axis (TP degree is an algorithmic choice; DP shrinks with capacity).
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Optional, Sequence, TypeVar
 
 import jax
 from jax.sharding import Mesh
 
 from repro.dist.sharding import AxisRules, DEFAULT_RULES, tree_shardings
+
+_T = TypeVar("_T")
+
+
+class ElasticMembership:
+    """Live-worker roster with deterministic shard (re)planning.
+
+    The sweep engine's fault-tolerant driver
+    (:func:`repro.sweep.runner.run_sweep_ft`) partitions pending chunks
+    round-robin across the *live* workers — the same deterministic
+    rule as :func:`repro.sweep.planner.shard` — and replans whenever
+    membership changes: a dropped worker's share is automatically
+    redistributed because the partition is a pure function of
+    ``(items, live roster)``.  ``generation`` increments on every
+    membership change, so long-lived holders of a partition can detect
+    staleness without comparing rosters.
+    """
+
+    def __init__(self, n_workers: int):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        self._live: list[int] = list(range(n_workers))
+        self.dropped: list[int] = []
+        self.generation = 0
+
+    @property
+    def live(self) -> tuple[int, ...]:
+        return tuple(self._live)
+
+    def is_live(self, worker: int) -> bool:
+        return worker in self._live
+
+    def drop(self, worker: int) -> None:
+        """Remove a worker from the roster (idempotent)."""
+        if worker in self._live:
+            self._live.remove(worker)
+            self.dropped.append(worker)
+            self.generation += 1
+
+    def join(self, worker: int) -> None:
+        """(Re-)admit a worker; the partition replans around it."""
+        if worker not in self._live:
+            self._live.append(worker)
+            self._live.sort()
+            if worker in self.dropped:
+                self.dropped.remove(worker)
+            self.generation += 1
+
+    def plan(self, items: Sequence[_T]) -> dict[int, list[_T]]:
+        """Round-robin partition of ``items`` over the live roster."""
+        out: dict[int, list[_T]] = {w: [] for w in self._live}
+        for i, item in enumerate(items):
+            out[self._live[i % len(self._live)]].append(item)
+        return out
+
+    def share(self, items: Sequence[_T], worker: int) -> list[_T]:
+        """One live worker's slice of the current partition."""
+        if worker not in self._live:
+            return []
+        return self.plan(items)[worker]
 
 
 def plan_remesh(n_devices: int, model_parallel: int,

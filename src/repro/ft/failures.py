@@ -18,6 +18,17 @@ class SimulatedFailure(RuntimeError):
     """A injected node/process failure."""
 
 
+class WorkerLost(SimulatedFailure):
+    """An injected sweep-worker loss.
+
+    Raised from a worker hook to simulate a process dying mid-chunk;
+    the fault-tolerant sweep driver
+    (:func:`repro.sweep.runner.run_sweep_ft`) treats it as permanent
+    membership loss: the worker leaves the elastic partition and its
+    in-flight chunk is released for the survivors.
+    """
+
+
 @dataclasses.dataclass
 class FailurePlan:
     """Fail at specific steps (once each)."""

@@ -16,22 +16,34 @@ arity, data pattern, violated timings, temperature, and voltage across
 Pipeline: :class:`~repro.sweep.spec.SweepSpec` (the grid, content-hashed)
 -> :mod:`~repro.sweep.planner` (backend-native batches / chunks)
 -> :mod:`~repro.sweep.runner` (execute; shard across workers and the
-device mesh) -> :mod:`~repro.sweep.store` (atomic per-chunk files;
-restart skips completed chunks) -> :mod:`~repro.sweep.aggregate`
-(headline tables).  ``python -m repro.sweep.run --smoke`` exercises the
-whole pipeline in seconds; see ``docs/SWEEPS.md``.
+device mesh, or fault-tolerantly with :func:`run_sweep_ft`'s elastic
+worker pool) -> :mod:`~repro.sweep.store` (atomic per-chunk files on a
+pluggable backend; restart skips completed chunks) ->
+:mod:`~repro.sweep.aggregate` (headline tables).
+:mod:`~repro.sweep.adaptive` replaces the dense grid with a boundary
+search over the same points/store when only the failure cliff matters.
+``python -m repro.sweep.run --smoke`` exercises the whole pipeline in
+seconds; see ``docs/SWEEPS.md``.
 """
 
 from repro.sweep import aggregate, presets  # noqa: F401
-from repro.sweep.planner import Chunk, plan, shard  # noqa: F401
-from repro.sweep.runner import (SweepResult, records_for,  # noqa: F401
-                                run_sweep)
-from repro.sweep.spec import (ANALYTIC, GridPoint, SweepSpec,  # noqa: F401
-                              load_spec)
-from repro.sweep.store import RecordStore, default_root, discover  # noqa: F401
+from repro.sweep.adaptive import (AdaptiveResult, AdaptiveSpec,  # noqa: F401
+                                  Crossing, run_adaptive)
+from repro.sweep.planner import (Chunk, chunks_by_point, plan,  # noqa: F401
+                                 shard)
+from repro.sweep.runner import (FtSweepResult, SweepResult,  # noqa: F401
+                                records_for, run_sweep, run_sweep_ft)
+from repro.sweep.spec import (ANALYTIC, SEARCH_AXES, GridPoint,  # noqa: F401
+                              SweepSpec, load_spec)
+from repro.sweep.store import (LocalDirBackend, MemoryBackend,  # noqa: F401
+                               RecordStore, RecordStoreBackend,
+                               default_root, discover)
 
 __all__ = [
-    "ANALYTIC", "Chunk", "GridPoint", "RecordStore", "SweepResult",
-    "SweepSpec", "aggregate", "default_root", "discover", "load_spec",
-    "plan", "presets", "records_for", "run_sweep", "shard",
+    "ANALYTIC", "AdaptiveResult", "AdaptiveSpec", "Chunk", "Crossing",
+    "FtSweepResult", "GridPoint", "LocalDirBackend", "MemoryBackend",
+    "RecordStore", "RecordStoreBackend", "SEARCH_AXES", "SweepResult",
+    "SweepSpec", "aggregate", "chunks_by_point", "default_root", "discover",
+    "load_spec", "plan", "presets", "records_for", "run_adaptive",
+    "run_sweep", "run_sweep_ft", "shard",
 ]

@@ -7,6 +7,12 @@ paper's headline quantities (replication delta, data-pattern
 sensitivity, temperature/voltage resilience) expressed on top of them,
 so ``benchmarks/paper_figures.py`` and ``results/make_tables.py`` carry
 no per-point loops of their own.
+
+Every reducer accepts any ``Iterable[dict]`` — including one-shot
+generators: functions that consume their input more than once
+materialize it to a list exactly once at entry, so a generator argument
+yields the same result as the equivalent list (regression-tested in
+``tests/test_sweep.py``).
 """
 
 from __future__ import annotations
@@ -51,6 +57,7 @@ def replication_delta(records: Iterable[dict], x: int = 3, hi: int = 32,
     """
     from repro.core import calibration as cal
 
+    records = list(records)  # consumed twice below
     lo = lo if lo is not None else cal.min_activation_for(x)
     s_hi = mean_success(records, x=x, n_act=hi, **eq)
     s_lo = mean_success(records, x=x, n_act=lo, **eq)
@@ -73,7 +80,14 @@ def pattern_sensitivity(records: Iterable[dict], **eq) -> dict[int, float]:
 def env_resilience(records: Iterable[dict], field: str,
                    baseline: float, **eq) -> float:
     """Obs 3/4/11-13/17/18: max relative success variation across an
-    environment axis (``temp_c`` or ``vpp_v``) vs its nominal value."""
+    environment axis (``temp_c`` or ``vpp_v``) vs its nominal value.
+
+    Groups with no record at the nominal ``baseline`` value are skipped
+    (their variation is undefined).  A group whose baseline success is
+    exactly ``0.0`` is *not* skipped: if it succeeds anywhere else on
+    the axis its relative variation is unbounded and the function
+    returns ``inf``; if it fails everywhere it contributes 0 variation.
+    """
     recs = filter_records(records, **eq)
     groups = group_mean(recs, ("x", "n_act", "n_dest"))
     worst = 0.0
@@ -81,7 +95,11 @@ def env_resilience(records: Iterable[dict], field: str,
         sub = filter_records(recs, x=x, n_act=n_act, n_dest=n_dest)
         by_env = group_mean(sub, (field,))
         base = by_env.get((baseline,))
-        if not base:
+        if base is None:
+            continue  # no measurement at nominal conditions
+        if base == 0.0:
+            if any(v != 0.0 for v in by_env.values()):
+                worst = float("inf")
             continue
         for v in by_env.values():
             worst = max(worst, abs(v / base - 1.0))
@@ -90,6 +108,7 @@ def env_resilience(records: Iterable[dict], field: str,
 
 def headline(records: Iterable[dict]) -> dict[str, float]:
     """Every headline quantity computable from the given records."""
+    records = list(records)  # consumed once per headline below
     out: dict[str, float] = {}
     xs = {r["x"] for r in records}
     n_acts = {r["n_act"] for r in records}

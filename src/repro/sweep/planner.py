@@ -99,6 +99,16 @@ def fused_majx_program(points: Sequence[GridPoint], rows: int
     return prog, out_base
 
 
+def chunks_by_point(chunks: Iterable[Chunk]) -> dict[int, Chunk]:
+    """Map every grid-point index to the chunk that executes it.
+
+    The adaptive boundary search (:mod:`repro.sweep.adaptive`) probes
+    individual grid points but executes/persists whole planned chunks,
+    so its stores stay interchangeable with grid-mode stores.
+    """
+    return {p.index: c for c in chunks for p in c.points}
+
+
 def shard(chunks: list[Chunk], num_shards: int, shard_index: int
           ) -> list[Chunk]:
     """Round-robin partition of chunks across ``num_shards`` workers.

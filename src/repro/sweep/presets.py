@@ -106,6 +106,24 @@ def smoke_spec(backends: tuple[str, ...] = ("sim", "pallas")) -> SweepSpec:
                      ideal=True, rows=2, words=16, chunk=4)
 
 
+def adaptive_smoke_spec() -> "AdaptiveSpec":
+    """The adaptive-smoke campaign: MAJ3@32 success vs a t1 ladder.
+
+    A 20-step t1 ladder (t2 pinned at the 3 ns optimum) on the analytic
+    backend: success decays from ~0.98 through the Obs 7 charge-sharing
+    cliff, crossing 0.9 almost immediately and 0.5 a few steps later.
+    ``chunk=1`` so every probe is one point — the CI gate asserts the
+    boundary search executes <= 40 % of the dense ladder while locating
+    the same cliff bracket (``scripts/ci.sh``).
+    """
+    from repro.sweep.adaptive import AdaptiveSpec
+
+    ladder = tuple((1.5 + 1.5 * k, 3.0) for k in range(20))
+    base = SweepSpec(name="adaptive-smoke", op="majx", backends=(ANALYTIC,),
+                     x_values=(3,), n_act=(32,), timings=ladder, chunk=1)
+    return AdaptiveSpec(base=base, thresholds=(0.5, 0.9))
+
+
 def preflight_specs(backend: str) -> tuple[SweepSpec, SweepSpec]:
     """Tiny MAJX + MRC parity sweeps for one backend (run_all_cells)."""
     majx = SweepSpec(name=f"preflight-majx-{backend}", op="majx",

@@ -28,13 +28,19 @@ point, so aggregation can diff behaviour against calibration.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+import threading
+import time
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.backends import ExecutionContext, Timings
 from repro.core.errormodel import ErrorModel
+from repro.ft.elastic import ElasticMembership
+from repro.ft.failures import WorkerLost
+from repro.ft.straggler import StragglerDetector
 from repro.session import CompileCache, DramSession
 from repro.sweep import planner
 from repro.sweep.spec import ANALYTIC, GridPoint, SweepSpec
@@ -147,11 +153,14 @@ class _Executor:
     chunks across the whole campaign share one fused schedule.
     """
 
-    def __init__(self, spec: SweepSpec, mesh=None):
+    def __init__(self, spec: SweepSpec, mesh=None,
+                 cache: Optional[CompileCache] = None):
         self.spec = spec
         self.mesh = mesh
         self._sessions: dict[tuple, DramSession] = {}
-        self._compile_cache = CompileCache()
+        # The compile cache is thread-safe and content-pure, so the
+        # fault-tolerant runner shares ONE across its worker executors.
+        self._compile_cache = cache if cache is not None else CompileCache()
         self._oracle = DramSession("oracle", name="sweep-oracle")
 
     def session(self, p: GridPoint) -> DramSession:
@@ -253,6 +262,7 @@ class _Executor:
 def run_sweep(spec: SweepSpec, root: Optional[str] = None, *,
               num_shards: int = 1, shard_index: int = 0,
               max_chunks: Optional[int] = None, mesh=None,
+              store: Optional[RecordStore] = None,
               progress: bool = False) -> SweepResult:
     """Execute (the missing part of) a sweep and return all records.
 
@@ -260,9 +270,13 @@ def run_sweep(spec: SweepSpec, root: Optional[str] = None, *,
     never re-executed; a run over a fully-populated store performs zero
     executions.  ``max_chunks`` bounds this invocation's work (used by
     tests to simulate a mid-campaign kill); ``num_shards``/``shard_index``
-    restrict this worker to its deterministic share of the plan.
+    restrict this worker to its deterministic share of the plan.  Pass
+    ``store=`` to supply a pre-bound :class:`RecordStore` (e.g. one on a
+    non-default :class:`~repro.sweep.store.RecordStoreBackend`);
+    ``root`` is ignored in that case.
     """
-    store = RecordStore(default_root(root), spec)
+    if store is None:
+        store = RecordStore(default_root(root), spec)
     chunks = planner.plan(spec)
     done = store.completed()
     todo = [c for c in planner.shard(chunks, num_shards, shard_index)
@@ -291,3 +305,238 @@ def records_for(spec: SweepSpec, root: Optional[str] = None,
                 **run_kw) -> list[dict]:
     """Records of a sweep, running whatever the store is missing."""
     return run_sweep(spec, root, **run_kw).records
+
+
+# --------------------------------------------------------------------------
+# fault-tolerant multi-worker driver
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FtSweepResult:
+    """What one :func:`run_sweep_ft` invocation did and produced.
+
+    ``executed_chunks`` counts chunk executions (a re-dispatched chunk
+    that both the straggler and the rescuer finish counts twice — the
+    store keeps one copy, last ``os.replace`` wins with identical
+    content); ``re_dispatched`` counts chunks stolen from flagged
+    stragglers; ``lost_workers`` are workers that left the elastic
+    membership mid-run.
+    """
+
+    spec: SweepSpec
+    store_path: str
+    n_points: int
+    executed_chunks: int
+    cached_chunks: int
+    re_dispatched: int
+    lost_workers: list[int]
+    worker_chunks: dict[int, int]
+    fleet_slowdown: float
+    records: list[dict]
+
+    def summary(self) -> str:
+        lost = (f", lost workers {self.lost_workers}"
+                if self.lost_workers else "")
+        redisp = (f", {self.re_dispatched} re-dispatched"
+                  if self.re_dispatched else "")
+        return (f"ft-sweep '{self.spec.name}' [{self.spec.spec_hash()}]: "
+                f"{self.n_points} points, {self.executed_chunks} chunks "
+                f"executed across {len(self.worker_chunks)} workers, "
+                f"{self.cached_chunks} cached{redisp}{lost} -> "
+                f"{len(self.records)} records at {self.store_path}")
+
+
+class _FtState:
+    """Lock-guarded shared state of one fault-tolerant run."""
+
+    def __init__(self, todo: list[planner.Chunk], n_workers: int,
+                 threshold: float):
+        self.lock = threading.Lock()
+        self.todo = todo
+        self.todo_keys = {c.key for c in todo}
+        self.done: set[str] = set()
+        self.claimed: dict[str, int] = {}
+        self.inflight: dict[int, tuple[planner.Chunk, float]] = {}
+        self.stolen: collections.deque[planner.Chunk] = collections.deque()
+        self.redispatched: set[str] = set()
+        self.executed_by: dict[int, int] = {w: 0 for w in range(n_workers)}
+        self.membership = ElasticMembership(n_workers)
+        self.detector = StragglerDetector(n_workers, threshold=threshold)
+        self.error: Optional[BaseException] = None
+
+    # Callers hold self.lock for every method below.
+    def pick(self, worker: int) -> Optional[planner.Chunk]:
+        """Next chunk for ``worker``: stolen work first, then its own
+        share of the elastic partition over unclaimed pending chunks."""
+        while self.stolen:
+            chunk = self.stolen.popleft()
+            if chunk.key not in self.done:
+                self.claimed[chunk.key] = worker
+                self.inflight[worker] = (chunk, time.monotonic())
+                return chunk
+        pending = [c for c in self.todo if c.key not in self.done
+                   and c.key not in self.claimed]
+        mine = self.membership.share(pending, worker)
+        if not mine:
+            return None
+        chunk = mine[0]
+        self.claimed[chunk.key] = worker
+        self.inflight[worker] = (chunk, time.monotonic())
+        return chunk
+
+    def all_done(self) -> bool:
+        return self.done >= self.todo_keys
+
+    def flagged_stragglers(self, now: float) -> set[int]:
+        """Workers the detector flags, counting in-flight elapsed time
+        as a provisional sample — so a worker stuck on its *first*
+        chunk (no completed sample yet) is still caught."""
+        trial = StragglerDetector(
+            self.detector.n_workers, alpha=self.detector.alpha,
+            threshold=self.detector.threshold, ema=self.detector.ema.copy(),
+            n_samples=self.detector.n_samples.copy())
+        for wid, (_, t0) in self.inflight.items():
+            trial.record(wid, now - t0)
+        return set(trial.stragglers())
+
+
+def _ft_worker(wid: int, spec: SweepSpec, store: RecordStore, st: _FtState,
+               stop: threading.Event, cache: CompileCache, mesh,
+               worker_hook, poll_s: float, progress: bool) -> None:
+    ex = _Executor(spec, mesh=mesh, cache=cache)
+    while not stop.is_set():
+        with st.lock:
+            if st.all_done():
+                return
+            chunk = st.pick(wid)
+        if chunk is None:
+            time.sleep(poll_s)
+            continue
+        t0 = time.monotonic()
+        try:
+            if worker_hook is not None:
+                worker_hook(wid, chunk)
+            records = ex.execute(chunk)
+        except WorkerLost:
+            with st.lock:
+                st.membership.drop(wid)
+                st.inflight.pop(wid, None)
+                # Release the claim: the survivors' repartition covers it.
+                if st.claimed.get(chunk.key) == wid:
+                    del st.claimed[chunk.key]
+            return
+        except BaseException as e:  # surfaced by the monitor
+            with st.lock:
+                st.error = st.error or e
+                st.membership.drop(wid)
+                st.inflight.pop(wid, None)
+                if st.claimed.get(chunk.key) == wid:
+                    del st.claimed[chunk.key]
+            return
+        if stop.is_set():
+            return  # run already complete; drop redundant duplicate work
+        store.put(chunk, records)
+        with st.lock:
+            st.done.add(chunk.key)
+            st.inflight.pop(wid, None)
+            st.executed_by[wid] += 1
+            st.detector.record(wid, max(time.monotonic() - t0, 1e-9))
+        if progress:
+            print(f"[ft-sweep {spec.name}] worker {wid} {chunk.key} "
+                  f"({len(records)} points)", flush=True)
+
+
+def run_sweep_ft(spec: SweepSpec, root: Optional[str] = None, *,
+                 n_workers: int = 2,
+                 worker_hook: Optional[Callable[[int, planner.Chunk],
+                                               None]] = None,
+                 straggler_threshold: float = 1.5,
+                 straggler_timeout_s: float = 5.0,
+                 poll_s: float = 0.02, mesh=None,
+                 store: Optional[RecordStore] = None,
+                 progress: bool = False) -> FtSweepResult:
+    """Multi-worker :func:`run_sweep` with elastic membership and
+    straggler re-dispatch (the ``repro.ft`` consumer).
+
+    ``n_workers`` threads share one :class:`RecordStore` and one
+    thread-safe compile cache; pending chunks are partitioned
+    round-robin over the *live* worker roster
+    (:class:`repro.ft.elastic.ElasticMembership`) and the partition
+    replans whenever membership changes.  Per-chunk wall times feed a
+    :class:`repro.ft.straggler.StragglerDetector`; a chunk in flight on
+    a flagged straggler for longer than ``straggler_timeout_s`` is
+    re-dispatched (once) to a healthy worker.  Both may finish — chunk
+    files are atomic and records are a pure function of (spec, chunk),
+    so the duplicate ``os.replace`` writes identical content and
+    last-write wins harmlessly.
+
+    ``worker_hook(worker_id, chunk)`` runs before every execution
+    attempt; tests inject failures by raising
+    :class:`repro.ft.failures.WorkerLost` (elastic drop) or by
+    sleeping (straggler).  Raises ``RuntimeError`` if every worker is
+    lost with chunks still pending.
+    """
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    if store is None:
+        store = RecordStore(default_root(root), spec)
+    chunks = planner.plan(spec)
+    done0 = store.completed()
+    todo = [c for c in chunks if c.key not in done0]
+    cached = sum(1 for c in chunks if c.key in done0)
+    st = _FtState(todo, n_workers, straggler_threshold)
+    stop = threading.Event()
+
+    if todo:
+        cache = CompileCache()
+        threads = [
+            threading.Thread(
+                target=_ft_worker, name=f"sweep-ft-{w}",
+                args=(w, spec, store, st, stop, cache, mesh, worker_hook,
+                      poll_s, progress),
+                daemon=True)
+            for w in range(n_workers)]
+        for t in threads:
+            t.start()
+        try:
+            while True:
+                with st.lock:
+                    if st.error is not None:
+                        raise RuntimeError(
+                            "sweep worker failed") from st.error
+                    if st.all_done():
+                        break
+                    if not st.membership.live:
+                        raise RuntimeError(
+                            f"all {n_workers} workers lost with "
+                            f"{len(st.todo_keys - st.done)} chunks pending")
+                    now = time.monotonic()
+                    flagged = st.flagged_stragglers(now)
+                    for wid, (chunk, t0) in list(st.inflight.items()):
+                        if (wid in flagged
+                                and now - t0 > straggler_timeout_s
+                                and chunk.key not in st.redispatched
+                                and chunk.key not in st.done
+                                and len(st.membership.live) > 1):
+                            st.stolen.append(chunk)
+                            st.redispatched.add(chunk.key)
+                            if progress:
+                                print(f"[ft-sweep {spec.name}] re-dispatch "
+                                      f"{chunk.key} from straggler {wid}",
+                                      flush=True)
+                time.sleep(poll_s)
+        finally:
+            stop.set()
+        for t in threads:
+            t.join(timeout=poll_s * 5)  # stragglers may still be sleeping
+
+    with st.lock:
+        return FtSweepResult(
+            spec=spec, store_path=store.path, n_points=spec.n_points(),
+            executed_chunks=sum(st.executed_by.values()),
+            cached_chunks=cached, re_dispatched=len(st.redispatched),
+            lost_workers=list(st.membership.dropped),
+            worker_chunks=dict(st.executed_by),
+            fleet_slowdown=st.detector.fleet_slowdown(),
+            records=store.records())

@@ -43,6 +43,17 @@ _BEST_TIMINGS = {
     "simra": (cal.SIMRA_BEST_T1_NS, cal.SIMRA_BEST_T2_NS),
 }
 
+#: Axes the adaptive boundary search (:mod:`repro.sweep.adaptive`) can
+#: bisect, mapped to the :class:`GridPoint` fields carrying their value.
+#: ``timings`` is a joint (t1, t2) axis — one ladder position per pair —
+#: and ``n_act`` also fixes the derived ``n_dest`` for ``mrc`` sweeps.
+SEARCH_AXES = {
+    "n_act": ("n_act", "n_dest"),
+    "timings": ("t1", "t2"),
+    "temp_c": ("temp_c",),
+    "vpp_v": ("vpp_v",),
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class GridPoint:
@@ -168,6 +179,26 @@ class SweepSpec:
 
     def n_points(self) -> int:
         return sum(1 for _ in self.points())
+
+    def axis_values(self, axis: str) -> tuple:
+        """The declared value ladder of one searchable axis, in spec
+        order (the order the author arranged — by convention increasing
+        stress / activation count; see :data:`SEARCH_AXES`)."""
+        if axis == "n_act":
+            return self.n_act
+        if axis == "timings":
+            return self._timings()
+        if axis == "temp_c":
+            return self.temps_c
+        if axis == "vpp_v":
+            return self.vpps_v
+        raise ValueError(f"unknown search axis {axis!r}; "
+                         f"expected one of {tuple(SEARCH_AXES)}")
+
+    def searchable_axes(self) -> tuple[str, ...]:
+        """Axes with more than one declared value (boundary-searchable)."""
+        return tuple(a for a in SEARCH_AXES
+                     if len(self.axis_values(a)) > 1)
 
     # ------------------------------------------------------------ identity
     def to_json(self) -> str:

@@ -246,6 +246,58 @@ def test_stochastic_sim_tracks_calibration(tmp_path):
     assert aggregate.replication_delta(records) > 0.15  # Obs 6 ordering
 
 
+# ------------------------------------------------------------ aggregation
+
+
+def _rec(**kw):
+    base = dict(op="majx", backend="sim", mfr="H", x=3, n_act=32, n_dest=0,
+                pattern="random", t1=1.5, t2=3.0, temp_c=50.0, vpp_v=2.5,
+                seed=0, success=1.0, expected=1.0, n_bits=64, index=0)
+    base.update(kw)
+    return base
+
+
+def test_aggregates_accept_one_shot_generators():
+    """Regression: headline()/pattern_sensitivity()/replication_delta()
+    iterated their input more than once, so a generator argument
+    silently computed from a partial (or empty) record set."""
+    records = [
+        _rec(index=0, n_act=4, success=0.6),
+        _rec(index=1, n_act=32, success=0.9),
+        _rec(index=2, n_act=32, pattern="0x00/0xFF", success=0.8),
+        _rec(index=3, n_act=32, temp_c=85.0, success=0.7),
+    ]
+    assert aggregate.replication_delta(iter(records)) \
+        == aggregate.replication_delta(records)
+    assert aggregate.pattern_sensitivity(iter(records)) \
+        == aggregate.pattern_sensitivity(records)
+    head = aggregate.headline(iter(records))
+    assert head == aggregate.headline(records)
+    # every headline family must actually be present, so the generator
+    # path exercised each multi-pass reducer
+    assert {"maj3_32_over_4_rel", "pattern_effect_x3_rel",
+            "temp_variation_max_rel"} <= set(head)
+
+
+def test_env_resilience_distinguishes_absent_from_zero_baseline():
+    """Regression: a group whose nominal-condition success was exactly
+    0.0 was skipped as if it had never been measured."""
+    # absent baseline: no record at 50C -> group skipped, variation 0
+    absent = [_rec(temp_c=85.0, success=0.4)]
+    assert aggregate.env_resilience(absent, "temp_c", 50.0) == 0.0
+
+    # zero baseline, succeeds elsewhere: unbounded relative variation
+    revived = [_rec(temp_c=50.0, success=0.0),
+               _rec(index=1, temp_c=85.0, success=0.4)]
+    assert aggregate.env_resilience(revived, "temp_c", 50.0) \
+        == float("inf")
+
+    # zero baseline, zero everywhere: contributes no variation
+    dead = [_rec(temp_c=50.0, success=0.0),
+            _rec(index=1, temp_c=85.0, success=0.0)]
+    assert aggregate.env_resilience(dead, "temp_c", 50.0) == 0.0
+
+
 # ------------------------------------------------------------------- CLI
 
 

@@ -1,0 +1,184 @@
+"""Adaptive boundary search: grid parity, economy, kill/resume.
+
+The load-bearing invariant: adaptive probes are ordinary dense-grid
+chunks executed into the ordinary content-hashed store, so records on
+points both modes touch are byte-identical, aggregates over overlapping
+points agree exactly, and a killed adaptive campaign resumes with zero
+recomputation — exactly like a grid one.
+"""
+
+import os
+
+import pytest
+
+from repro.sweep import (AdaptiveSpec, MemoryBackend, RecordStore, SweepSpec,
+                         presets, run_adaptive, run_sweep)
+
+LADDER = tuple((1.5 + 1.5 * k, 3.0) for k in range(20))
+
+
+def _smoke():
+    return presets.adaptive_smoke_spec()
+
+
+# ----------------------------------------------------------- spec policy
+
+
+def test_adaptive_spec_validation():
+    base = _smoke().base
+    with pytest.raises(ValueError, match="threshold"):
+        AdaptiveSpec(base=base, thresholds=())
+    with pytest.raises(ValueError, match=r"\(0, 1\)"):
+        AdaptiveSpec(base=base, thresholds=(1.5,))
+    with pytest.raises(ValueError, match="unknown search axis"):
+        AdaptiveSpec(base=base, axes=("pattern",))
+    with pytest.raises(ValueError, match="not swept"):
+        AdaptiveSpec(base=base, axes=("n_act",))  # single value in base
+    with pytest.raises(ValueError, match="refine_radius"):
+        AdaptiveSpec(base=base, refine_radius=-1)
+    with pytest.raises(ValueError, match="metric"):
+        AdaptiveSpec(base=base, metric="latency")
+
+
+def test_search_axes_default_to_swept_axes():
+    aspec = _smoke()
+    assert aspec.search_axes() == ("timings",)
+    assert AdaptiveSpec(base=aspec.base, axes=("timings",)).search_axes() \
+        == ("timings",)
+
+
+# ------------------------------------------------- cliff location / economy
+
+
+def test_adaptive_locates_dense_cliff_with_few_points(tmp_path):
+    """The boundary search must bracket exactly the dense scan's first
+    below-threshold step while consulting <= 40 % of the ladder."""
+    aspec = _smoke()
+    dense = run_sweep(aspec.base, str(tmp_path / "dense"))
+    adaptive = run_adaptive(aspec, str(tmp_path / "adaptive"))
+
+    assert adaptive.complete
+    assert adaptive.points_covered <= 0.4 * adaptive.n_grid_points
+
+    by_idx = {r["index"]: r["success"] for r in dense.records}
+    order = sorted(by_idx)
+    assert len(adaptive.crossings) == len(aspec.thresholds)
+    for c in adaptive.crossings:
+        assert c.crossed and c.direction == "falling"
+        first_below = next(i for i in order if by_idx[i] < c.threshold)
+        assert (c.lo_index, c.hi_index) == (first_below - 1, first_below)
+
+
+def test_flat_surface_probes_endpoints_only(tmp_path):
+    """An ideal (always-1.0) surface never crosses: the search must
+    report crossed=False after touching only the two endpoints."""
+    base = SweepSpec(name="flat", op="majx", backends=("sim",),
+                     x_values=(3,), n_act=(32,), timings=LADDER[:8],
+                     ideal=True, rows=2, words=16, chunk=1)
+    result = run_adaptive(AdaptiveSpec(base=base), str(tmp_path))
+    assert result.n_probed == 2
+    assert all(not c.crossed for c in result.crossings)
+    assert all(c.direction is None for c in result.crossings)
+
+
+# -------------------------------------------------------- store parity
+
+
+def test_grid_and_adaptive_records_byte_identical(tmp_path):
+    """Stochastic sim backend: every chunk file both modes produce must
+    be byte-for-byte identical (records are pure f(spec, chunk))."""
+    base = SweepSpec(name="parity", op="majx", backends=("sim",),
+                     x_values=(3,), n_act=(32,), timings=LADDER[:10],
+                     rows=2, words=32, chunk=1)
+    dense = run_sweep(base, str(tmp_path / "dense"))
+    adaptive = run_adaptive(AdaptiveSpec(base=base), str(tmp_path / "adapt"))
+
+    d_dir = os.path.join(dense.store_path, "chunks")
+    a_dir = os.path.join(adaptive.store_path, "chunks")
+    common = sorted(set(os.listdir(d_dir)) & set(os.listdir(a_dir)))
+    assert common  # at minimum the endpoint probes overlap
+    for f in common:
+        with open(os.path.join(d_dir, f), "rb") as da, \
+                open(os.path.join(a_dir, f), "rb") as ad:
+            assert da.read() == ad.read(), f
+
+    # Aggregate parity on the overlapping points follows from the above
+    # but is the user-facing contract — check it directly too.
+    probed = {r["index"] for r in adaptive.records}
+    dense_sub = sorted((r for r in dense.records if r["index"] in probed),
+                       key=lambda r: r["index"])
+    adapt_sub = sorted(adaptive.records, key=lambda r: r["index"])
+    assert dense_sub == adapt_sub
+
+
+def test_adaptive_then_dense_shares_one_store(tmp_path):
+    """A later dense run over the same spec fills in only the plateau the
+    search skipped — the cliff probes are never recomputed."""
+    aspec = _smoke()
+    adaptive = run_adaptive(aspec, str(tmp_path))
+    assert adaptive.executed_chunks > 0
+    dense = run_sweep(aspec.base, str(tmp_path))
+    assert dense.store_path == adaptive.store_path
+    assert dense.cached_chunks == adaptive.executed_chunks
+    assert dense.executed_chunks == (aspec.base.n_points()
+                                     - adaptive.executed_chunks)
+
+
+# ---------------------------------------------------------- kill / resume
+
+
+def test_adaptive_kill_resume_recomputes_nothing(tmp_path):
+    """Kill mid-search (max_chunks), restart: stored probes replay from
+    the store (mtimes unchanged), only missing probes execute, and the
+    final crossings equal an uninterrupted run's."""
+    aspec = _smoke()
+    partial = run_adaptive(aspec, str(tmp_path / "a"), max_chunks=3)
+    assert not partial.complete
+    assert partial.executed_chunks == 3
+
+    store = RecordStore(str(tmp_path / "a"), aspec.base)
+    before = {k: os.path.getmtime(os.path.join(store.path, "chunks",
+                                               k + ".json"))
+              for k in store.completed()}
+    assert len(before) == 3
+
+    resumed = run_adaptive(aspec, str(tmp_path / "a"))
+    assert resumed.complete
+    assert resumed.cached_chunks == 3
+    for k, mt in before.items():
+        assert os.path.getmtime(os.path.join(
+            store.path, "chunks", k + ".json")) == mt
+
+    uninterrupted = run_adaptive(aspec, str(tmp_path / "b"))
+    assert resumed.crossings == uninterrupted.crossings
+    assert resumed.executed_chunks + resumed.cached_chunks \
+        == uninterrupted.executed_chunks
+
+    # Third invocation: the whole search replays from the store.
+    again = run_adaptive(aspec, str(tmp_path / "a"))
+    assert again.executed_chunks == 0
+    assert again.crossings == uninterrupted.crossings
+
+
+# ------------------------------------------------------- pluggable store
+
+
+def test_memory_backend_matches_local_store(tmp_path):
+    """The in-memory backend is a drop-in: same records, same crossings,
+    same resume semantics, no filesystem."""
+    aspec = _smoke()
+    disk = run_adaptive(aspec, str(tmp_path))
+
+    backend = MemoryBackend("adaptive-test")
+    store = RecordStore("unused-root", aspec.base, backend=backend)
+    mem = run_adaptive(aspec, store=store)
+    assert mem.store_path == "memory://adaptive-test"
+    assert mem.crossings == disk.crossings
+    assert sorted(mem.records, key=lambda r: r["index"]) \
+        == sorted(disk.records, key=lambda r: r["index"])
+
+    # Resume against the same live backend: zero executions.
+    again = run_adaptive(aspec, store=RecordStore("unused-root", aspec.base,
+                                                  backend=backend))
+    assert again.executed_chunks == 0
+    assert again.crossings == disk.crossings

@@ -1,0 +1,165 @@
+"""Fault-tolerant sweep driver: elastic membership, straggler re-dispatch.
+
+The contract under test: worker loss and re-dispatch change *who*
+executes a chunk, never *what* it produces — records stay a pure
+function of (spec, chunk), so every failure scenario below must end
+with zero missing chunks and records identical to a plain
+single-driver run.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.ft.elastic import ElasticMembership
+from repro.ft.failures import WorkerLost
+from repro.sweep import SweepSpec, plan, run_sweep, run_sweep_ft
+
+# 4 one-point chunks: with 2 workers, whichever holds a chunk leaves the
+# other a non-empty round-robin share, so barrier-synchronized failure
+# injection in the hooks below cannot starve.
+SPEC = dict(op="majx", backends=("sim",), x_values=(3, 5), n_act=(32,),
+            seeds=(0, 1), rows=2, words=16, chunk=1)
+
+
+def _spec(name):
+    return SweepSpec(name=name, **SPEC)
+
+
+def _sorted(records):
+    return sorted(records, key=lambda r: r["index"])
+
+
+# ------------------------------------------------------ elastic membership
+
+
+def test_elastic_membership_replans_on_drop():
+    m = ElasticMembership(3)
+    items = list(range(7))
+    p0 = m.plan(items)
+    assert sorted(sum(p0.values(), [])) == items
+    assert set(p0) == {0, 1, 2}
+
+    gen = m.generation
+    m.drop(1)
+    assert m.generation > gen
+    assert m.live == (0, 2)
+    assert m.dropped == [1]
+    p1 = m.plan(items)
+    assert set(p1) == {0, 2}
+    assert sorted(sum(p1.values(), [])) == items
+    assert m.share(items, 1) == []  # dead workers own nothing
+
+    m.drop(1)  # idempotent
+    assert m.dropped == [1]
+
+    m.join(1)
+    assert m.live == (0, 1, 2)
+
+
+def test_elastic_membership_validation():
+    with pytest.raises(ValueError):
+        ElasticMembership(0)
+
+
+# ------------------------------------------------------------ happy path
+
+
+def test_ft_run_matches_plain_run(tmp_path):
+    spec = _spec("ft-plain")
+    baseline = run_sweep(spec, str(tmp_path / "base"))
+    ft = run_sweep_ft(spec, str(tmp_path / "ft"), n_workers=2)
+    assert ft.lost_workers == [] and ft.re_dispatched == 0
+    assert _sorted(ft.records) == _sorted(baseline.records)
+    assert sum(ft.worker_chunks.values()) == ft.executed_chunks
+    assert len(ft.records) == spec.n_points()
+
+    # resume: everything cached, no worker executes anything
+    again = run_sweep_ft(spec, str(tmp_path / "ft"), n_workers=2)
+    assert again.executed_chunks == 0
+    assert again.cached_chunks == ft.executed_chunks
+    assert _sorted(again.records) == _sorted(baseline.records)
+
+
+# ------------------------------------------------------------ worker loss
+
+
+def test_dead_worker_chunks_are_reassigned(tmp_path):
+    """Worker 1 dies after both workers hold a chunk: the run must still
+    finish with zero missing chunks and untouched record content."""
+    spec = _spec("ft-dead")
+    baseline = run_sweep(spec, str(tmp_path / "base"))
+
+    barrier = threading.Barrier(2, timeout=10)
+    lock = threading.Lock()
+    seen = set()
+
+    def hook(wid, chunk):
+        with lock:
+            first = wid not in seen
+            seen.add(wid)
+        if first:
+            barrier.wait()  # both workers are mid-claim before the death
+        if wid == 1:
+            raise WorkerLost("injected")
+
+    ft = run_sweep_ft(spec, str(tmp_path / "ft"), n_workers=2,
+                      worker_hook=hook)
+    assert ft.lost_workers == [1]
+    # the survivor picked up everything, including the dead worker's share
+    assert ft.worker_chunks.get(1, 0) == 0
+    assert ft.worker_chunks[0] == ft.executed_chunks == len(plan(spec))
+    assert len(ft.records) == spec.n_points()
+    assert _sorted(ft.records) == _sorted(baseline.records)
+
+
+def test_all_workers_lost_raises(tmp_path):
+    spec = _spec("ft-all-lost")
+
+    def hook(wid, chunk):
+        raise WorkerLost("injected")
+
+    with pytest.raises(RuntimeError, match="workers lost"):
+        run_sweep_ft(spec, str(tmp_path), n_workers=2, worker_hook=hook)
+
+
+def test_worker_exception_propagates(tmp_path):
+    spec = _spec("ft-crash")
+
+    def hook(wid, chunk):
+        raise RuntimeError("kaboom")
+
+    with pytest.raises(RuntimeError, match="worker failed") as err:
+        run_sweep_ft(spec, str(tmp_path), n_workers=2, worker_hook=hook)
+    assert "kaboom" in str(err.value.__cause__)
+
+
+# ------------------------------------------------------- straggler steal
+
+
+def test_straggler_chunk_is_redispatched(tmp_path):
+    """Worker 1 stalls on its first chunk; past the timeout the monitor
+    re-dispatches that chunk to the healthy worker and the run finishes
+    promptly with complete, untorn records."""
+    spec = _spec("ft-straggle")
+    baseline = run_sweep(spec, str(tmp_path / "base"))
+    n_chunks = len(plan(spec))
+    assert n_chunks >= 2
+
+    stalled = threading.Event()
+
+    def hook(wid, chunk):
+        if wid == 1 and not stalled.is_set():
+            stalled.set()
+            time.sleep(8.0)  # far past straggler_timeout_s
+
+    t0 = time.monotonic()
+    ft = run_sweep_ft(spec, str(tmp_path / "ft"), n_workers=2,
+                      worker_hook=hook, straggler_timeout_s=0.15,
+                      poll_s=0.02)
+    wall = time.monotonic() - t0
+    assert ft.re_dispatched >= 1
+    assert wall < 8.0  # finished without waiting out the stall
+    assert len(ft.records) == spec.n_points()
+    assert _sorted(ft.records) == _sorted(baseline.records)

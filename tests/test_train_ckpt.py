@@ -140,6 +140,33 @@ def test_straggler_detector():
     assert d.fleet_slowdown() > 2.0
 
 
+def test_straggler_detector_zero_step_time_is_a_sample():
+    """Regression: a measured 0.0 step time used to look identical to
+    the cold 'no samples yet' sentinel (ema == 0), silently excluding
+    that worker from straggler math.  Sample counts are now explicit."""
+    d = StragglerDetector(n_workers=3)
+    d.record(0, 0.0)   # instant worker: a real measurement
+    d.record(1, 0.1)
+    d.record(2, 5.0)
+    # worker 0's 0.0 participates: the median is 0.1 and worker 2 is
+    # flagged against it rather than against a roster that forgot w0.
+    assert d.stragglers() == [2]
+    assert d.fleet_slowdown() > 10.0
+
+
+def test_straggler_detector_seeded_and_cold_workers():
+    # Seeded EMAs count as warm (one prior sample each)...
+    d = StragglerDetector(n_workers=2, ema=np.array([1.0, 4.0]))
+    assert d.stragglers() == [1]
+    # ...while a cold worker (no samples) is excluded until it reports.
+    d2 = StragglerDetector(n_workers=3)
+    d2.record(0, 1.0)
+    d2.record(1, 1.0)
+    assert d2.stragglers() == []
+    d2.record(2, 9.0)
+    assert d2.stragglers() == [2]
+
+
 def test_plan_remesh():
     assert plan_remesh(256, 16) == (16, 16)
     assert plan_remesh(240, 16) == (15, 16)  # one node lost
