@@ -1,4 +1,4 @@
-"""``repro.bench``: per-op vs fused vs megakernel execution harness.
+"""``benchmarks.bench``: per-op vs fused vs megakernel execution harness.
 
 Times the same addressed :class:`~repro.pud.isa.Program` through all
 three execution paths of a :class:`~repro.session.DramSession` — per-op

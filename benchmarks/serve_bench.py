@@ -1,4 +1,4 @@
-"""``repro.bench`` serve harness: offered load vs SLO under batching.
+"""``benchmarks.serve_bench``: offered load vs SLO under batching.
 
 Drives a :class:`~repro.serve.service.PudService` with a mixed
 integrity workload (X-replica MAJX heals + Multi-RowCopy erases) at a

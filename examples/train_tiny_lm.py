@@ -12,7 +12,7 @@ Usage:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 200]
 import argparse
 import tempfile
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.ft.failures import FailurePlan

@@ -2,19 +2,27 @@
 """Docs consistency check: code references in docs/*.md must resolve.
 
 Scans every fenced code block and inline code span in ``docs/*.md`` (and
-README.md) for
+README.md), plus the *module docstrings* of ``examples/*.py`` and
+``benchmarks/*.py`` (they are user-facing documentation too), for
 
 * module paths (``repro.sweep.runner``, ``repro.dist.sharding.foo`` —
   attribute tails are stripped by retrying shorter prefixes), and
 * repo file paths (``src/repro/sweep/spec.py``, ``scripts/ci.sh``, ...)
 
 and fails listing every reference that does not resolve to a real file
-under the repo.  Keeps the docs layer honest as modules move: CI runs
-this after the test suite (see ``scripts/ci.sh``).
+under the repo.  It also cross-checks the ``repro-bench/*`` result
+schema ids: every id mentioned in the docs must be one a benchmark
+script actually writes (a ``SCHEMA = "repro-bench/..."`` assignment),
+and every written id must be documented — so a schema bump that
+forgets ``docs/BENCH.md`` (or vice versa) fails here instead of
+surprising a downstream consumer.  Keeps the docs layer honest as
+modules move: CI runs this after the test suite (see
+``scripts/ci.sh``).
 """
 
 from __future__ import annotations
 
+import ast
 import glob
 import os
 import re
@@ -29,6 +37,9 @@ MODULE_RE = re.compile(r"\brepro(?:\.\w+)+")
 PATH_RE = re.compile(
     r"\b(?:src|docs|scripts|tests|benchmarks|results|examples)"
     r"/[\w./-]+\.(?:py|md|sh|json|toml)\b")
+SCHEMA_RE = re.compile(r"\brepro-bench/[a-z0-9-]+\b")
+SCHEMA_DEF_RE = re.compile(r"^SCHEMA\s*=\s*[\"'](repro-bench/[a-z0-9-]+)",
+                           re.M)
 
 
 def code_regions(text: str):
@@ -51,33 +62,77 @@ def module_resolves(dotted: str) -> bool:
     return False
 
 
+def module_docstring(path: str) -> str:
+    """A script's module docstring, or "" when absent/unparseable."""
+    with open(path) as f:
+        try:
+            tree = ast.parse(f.read())
+        except SyntaxError:
+            return ""
+    return ast.get_docstring(tree) or ""
+
+
+def check_schema_ids() -> tuple[list[str], int]:
+    """Cross-check repro-bench/* ids: docs vs bench-script writers."""
+    written: set[str] = set()
+    for path in sorted(glob.glob(os.path.join(REPO, "benchmarks", "*.py"))):
+        with open(path) as f:
+            written.update(SCHEMA_DEF_RE.findall(f.read()))
+    documented: set[str] = set()
+    for path in sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))) + \
+            [os.path.join(REPO, "README.md")]:
+        with open(path) as f:
+            documented.update(SCHEMA_RE.findall(f.read()))
+    problems = [f"docs mention schema {s!r} that no benchmark writes"
+                for s in sorted(documented - written)]
+    problems += [f"benchmarks write schema {s!r} never documented in "
+                 f"docs/*.md" for s in sorted(written - documented)]
+    return problems, len(written | documented)
+
+
 def main() -> int:
     docs = sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
     docs.append(os.path.join(REPO, "README.md"))
+    scripts = sorted(glob.glob(os.path.join(REPO, "examples", "*.py"))
+                     + glob.glob(os.path.join(REPO, "benchmarks", "*.py")))
     bad: list[tuple[str, str]] = []
     n_refs = 0
+
+    def scan(rel: str, region: str) -> None:
+        nonlocal n_refs
+        for mod in MODULE_RE.findall(region):
+            n_refs += 1
+            if not module_resolves(mod):
+                bad.append((rel, mod))
+        for p in PATH_RE.findall(region):
+            if "*" in p:
+                continue  # glob examples
+            n_refs += 1
+            if not os.path.isfile(os.path.join(REPO, p)):
+                bad.append((rel, p))
+
     for path in docs:
         with open(path) as f:
             text = f.read()
         rel = os.path.relpath(path, REPO)
         for region in code_regions(text):
-            for mod in MODULE_RE.findall(region):
-                n_refs += 1
-                if not module_resolves(mod):
-                    bad.append((rel, mod))
-            for p in PATH_RE.findall(region):
-                if "*" in p:
-                    continue  # glob examples
-                n_refs += 1
-                if not os.path.isfile(os.path.join(REPO, p)):
-                    bad.append((rel, p))
-    if bad:
+            scan(rel, region)
+    for path in scripts:
+        # Module docstrings are documentation: references must resolve
+        # the same way doc-file references do.
+        scan(os.path.relpath(path, REPO), module_docstring(path))
+
+    schema_problems, n_schemas = check_schema_ids()
+    if bad or schema_problems:
         print("unresolved doc references:")
         for doc, ref in sorted(set(bad)):
             print(f"  {doc}: {ref}")
+        for msg in schema_problems:
+            print(f"  {msg}")
         return 1
     print(f"docs check OK ({n_refs} code references across "
-          f"{len(docs)} files resolve)")
+          f"{len(docs)} doc files + {len(scripts)} script docstrings "
+          f"resolve; {n_schemas} bench schema id(s) consistent)")
     return 0
 
 

@@ -4,6 +4,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== lint (ruff, correctness tier — skipped when unavailable) =="
+if command -v ruff >/dev/null 2>&1; then
+    # Config lives in pyproject.toml ([tool.ruff]): pyflakes + E9 only.
+    ruff check src tests benchmarks scripts examples
+else
+    echo "ruff not installed in this image; lint config still applies in editors"
+fi
+
 echo "== tier-1: full test suite =="
 python -m pytest -x -q
 
@@ -158,6 +166,14 @@ print(f"serve gate OK: load {o} batched {bat['throughput_rps']:.0f} req/s"
       f"{bat['cache']['hit_rate']*100:.0f}%")
 PY
 rm -rf "$SERVE_CI_ROOT"
+
+echo "== analyzer gate: certify goldens/serve/sweep + seeded mutations =="
+# --all = positive certification of every golden fixture, serve tick
+# program, and sweep chunk program; the negative gate (every applicable
+# seeded table corruption must be REJECTED); and the certificate-cache
+# check (repeat certification of a cached program is a pure hit — zero
+# re-analysis).  Nonzero exit on any hole.
+PYTHONPATH=src python -m repro.analyze --all
 
 echo "== docs check (module paths in docs/*.md resolve) =="
 python scripts/check_docs.py

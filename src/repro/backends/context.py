@@ -62,6 +62,11 @@ class ExecutionContext:
 
     Framework execution knobs:
 
+    * ``certify`` — run the static analyzer over every fused artifact a
+      :class:`~repro.session.DramSession` executes (cached by program
+      content, see :meth:`repro.session.cache.CompileCache.
+      certificate_for`); set False to opt out on hot paths that already
+      certified their programs elsewhere,
     * ``interpret`` — Pallas interpret mode (CPU) vs compiled TPU,
     * ``block_r`` / ``block_c`` — VPU tile geometry for bulk kernels,
     * ``vmem_budget_bytes`` — on-chip working-set ceiling the megakernel
@@ -82,6 +87,7 @@ class ExecutionContext:
     tier: int = 5
     n_act: int = 32
 
+    certify: bool = True
     interpret: bool = True
     block_r: int = 8
     block_c: int = 512

@@ -17,10 +17,9 @@ the paper measures at 99.98 % success for 31 destinations.
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.pud import tmr

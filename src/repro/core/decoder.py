@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Sequence
 
 from repro.core import calibration as cal
 

@@ -29,7 +29,6 @@ import dataclasses
 import math
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import calibration as cal
 

@@ -14,7 +14,7 @@ oracle used by tests and by the Pallas kernel's ref.
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

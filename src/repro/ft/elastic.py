@@ -12,7 +12,7 @@ model axis (TP degree is an algorithmic choice; DP shrinks with capacity).
 
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, TypeVar
+from typing import Optional, Sequence, TypeVar
 
 import jax
 from jax.sharding import Mesh

@@ -26,7 +26,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import SHAPES, all_configs, get_config, shape_applicable

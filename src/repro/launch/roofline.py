@@ -33,7 +33,6 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

@@ -12,9 +12,8 @@ Three execution paths, all numerically cross-checked in tests:
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.common import act_fn, dense_init

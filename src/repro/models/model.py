@@ -14,7 +14,6 @@ O(1) in depth) and configurable rematerialization.  Decode scans over
 
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

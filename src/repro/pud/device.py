@@ -13,9 +13,7 @@ import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import calibration as cal
 from repro.core.errormodel import ErrorModel
 from repro.core.subarray import DeviceProfile, Subarray
 from repro.core import majx as mj

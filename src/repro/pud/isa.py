@@ -13,7 +13,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
-from typing import Iterable
 
 from repro.core.errormodel import ErrorModel, expected_retries
 from repro.pud import latency as lat

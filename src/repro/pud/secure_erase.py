@@ -18,7 +18,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import calibration as cal
-from repro.core import commands as cmd
 from repro.core.subarray import Subarray
 from repro.core import rowcopy as rc
 from repro.pud.latency import LAT

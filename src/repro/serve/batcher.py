@@ -29,7 +29,6 @@ and the schedule cache makes it 1 miss + N-1 hits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

@@ -42,6 +42,7 @@ from repro.compile.schedule import Schedule, build_schedule
 from repro.pud.isa import Program
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard for hints only
+    from repro.analyze.cert import Certificate
     from repro.compile.megakernel import MegaLowering
 
 
@@ -83,16 +84,22 @@ class CompileCache:
 
     A second LRU store under the same keys holds megakernel
     :class:`~repro.compile.megakernel.MegaLowering` tables
-    (:meth:`lowering_for`), with its own ``lowering_stats`` window.
+    (:meth:`lowering_for`), with its own ``lowering_stats`` window; a
+    third holds analysis :class:`~repro.analyze.cert.Certificate`
+    records (:meth:`certificate_for`, ``certificate_stats``) so a
+    repeated program certifies once and is a pure lookup afterwards.
     """
 
     def __init__(self, maxsize: int = 128):
         self.maxsize = maxsize
         self.stats = CacheStats()
         self.lowering_stats = CacheStats()
+        self.certificate_stats = CacheStats()
         self._entries: collections.OrderedDict[str, Schedule] = \
             collections.OrderedDict()
         self._lowerings: "collections.OrderedDict[str, MegaLowering]" = \
+            collections.OrderedDict()
+        self._certificates: "collections.OrderedDict[str, Certificate]" = \
             collections.OrderedDict()
         self._lock = threading.RLock()
 
@@ -149,3 +156,40 @@ class CompileCache:
             while len(self._lowerings) > self.maxsize:
                 self._lowerings.popitem(last=False)
             return low
+
+    def certificate_for(self, program: Program, key: Optional[str] = None,
+                        sched: Optional[Schedule] = None,
+                        lowering: "Optional[MegaLowering]" = None
+                        ) -> "Certificate":
+        """The program's analysis :class:`~repro.analyze.cert.Certificate`.
+
+        Cached under the same content key as schedules, with a third
+        stats window (``certificate_stats``): a *hit* means the artifact
+        was admitted analyzed and zero re-analysis happened — the
+        property the CI gate asserts.  A cached fused-only certificate
+        is *upgraded* (one extra miss) the first time the caller also
+        hands in a megakernel ``lowering``; a lowering-covering
+        certificate satisfies fused-only lookups.  Raises
+        :class:`~repro.analyze.cert.CertificationError` on any error
+        finding — a program that fails certification is never admitted.
+        """
+        from repro.analyze.cert import certify
+
+        key = key or program_key(program)
+        with self._lock:
+            cert = self._certificates.get(key)
+            if cert is not None and (lowering is None
+                                     or cert.lowering_digest
+                                     == lowering.digest()):
+                self._certificates.move_to_end(key)
+                self.certificate_stats.hits += 1
+                return cert
+            self.certificate_stats.misses += 1
+            if sched is None:
+                sched = self.schedule_for(program, key=key)
+            cert = certify(program, sched=sched, lowering=lowering,
+                           key=key, where=f"program {key[:12]}")
+            self._certificates[key] = cert
+            while len(self._certificates) > self.maxsize:
+                self._certificates.popitem(last=False)
+            return cert

@@ -109,6 +109,16 @@ class RowAllocator:
         """Rows currently reserved (allocated and not freed)."""
         return self._next - len(self._free)
 
+    @property
+    def free_rows(self) -> tuple[int, ...]:
+        """Indices currently on the free list.
+
+        A program referencing any of these is using a stale handle —
+        the index will alias the next reservation.  This is what
+        :func:`repro.analyze.liveness.allocator_findings` audits.
+        """
+        return tuple(self._free)
+
     def alloc_row(self, tag: str = "") -> Row:
         return self.alloc(1, tag=tag)[0]
 

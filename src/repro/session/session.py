@@ -107,6 +107,13 @@ class DramSession:
         the lowered level tables cache under the same content key (with
         their own ``cache.lowering_stats`` window, so schedule-cache
         accounting is mode-independent).
+
+        Unless ``ctx.certify`` is False, the resolved artifacts are
+        also statically certified (race / liveness / equivalence, see
+        :mod:`repro.analyze`) through the cache's certificate store —
+        one analysis per program content, raising
+        :class:`~repro.analyze.cert.CertificationError` if the compiled
+        schedule or level tables ever diverge from program dataflow.
         """
         key = program_key(program)
         self._validate(program, state, key)
@@ -115,6 +122,12 @@ class DramSession:
         if mode == "megakernel" and self.capabilities().megakernel:
             lowering = self.cache.lowering_for(program, key=key,
                                                sched=sched)
+        if self.ctx.certify:
+            # Static race/liveness/equivalence certification of the
+            # exact artifacts about to execute; content-cached, so a
+            # repeated program is a dictionary hit, not a re-analysis.
+            self.cache.certificate_for(program, key=key, sched=sched,
+                                       lowering=lowering)
         return self.backend.run_fused(program, state, sched=sched,
                                       mode=mode, lowering=lowering)
 

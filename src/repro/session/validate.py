@@ -4,31 +4,39 @@ An addressed :class:`~repro.pud.isa.Program` that references rows
 outside its subarray image, or writes one destination row twice in a
 single op, would previously fail *inside* an executing kernel — a
 cryptic gather/scatter shape error (pallas), a silently-wrong row image
-(sim), or nothing at all.  :func:`check_program` walks the op stream
-once on the host and raises :class:`ProgramValidationError` with the op,
-its provenance tag, and the subarray context, so every
-:class:`~repro.session.DramSession` execution path rejects malformed
-programs up front.
+(sim), or nothing at all.  :func:`check_program` rejects malformed
+programs up front with the op, its provenance tag, and the subarray
+context in the message.
+
+The checks themselves live in :func:`repro.analyze.races.check_ops` —
+the same structural pass the certifier runs — so session-layer
+validation and :mod:`repro.analyze` certification can never disagree
+about what a well-formed program is.  This wrapper keeps the historical
+raise-on-first-error contract: ``error`` findings raise
+:class:`ProgramValidationError` (message of the first defect, full
+list attached as ``findings``); ``warning`` findings (advisory
+activation counts) never block execution.
 """
 
 from __future__ import annotations
 
-import collections
-
+from repro.analyze.races import check_ops
+from repro.analyze.report import ERROR, Finding
 from repro.pud.isa import Program
 from repro.session.rows import SessionError
 
-#: Kinds that read exactly one source row when addressed.
-_SINGLE_SRC = ("NOT", "COPY", "MRC")
-
 
 class ProgramValidationError(SessionError):
-    """An addressed Program failed build-time validation."""
+    """An addressed Program failed build-time validation.
 
+    ``findings`` carries every error-severity
+    :class:`~repro.analyze.report.Finding` of the failed pass, not just
+    the first one the message shows.
+    """
 
-def _label(i: int, op) -> str:
-    tag = f", tag {op.tag!r}" if op.tag else ""
-    return f"op[{i}] {op.kind}{tag}"
+    def __init__(self, message: str, findings: tuple[Finding, ...] = ()):
+        super().__init__(message)
+        self.findings = findings
 
 
 def check_program(program: Program, n_rows: int,
@@ -36,39 +44,13 @@ def check_program(program: Program, n_rows: int,
     """Validate every addressed op against an ``n_rows``-row subarray.
 
     Checks, per op with destinations (cost-only and I/O ops are exempt
-    like in the scheduler): all ``srcs``/``dsts`` inside ``[0, n_rows)``,
-    no destination row written twice *within* the op, MAJ arity odd >= 3
-    with one source per operand plane (duplicate sources are legal —
-    that is the paper's input-replication identity), and single-source
-    kinds carrying exactly one source.
+    like in the scheduler): known op kind, all ``srcs``/``dsts`` inside
+    ``[0, n_rows)``, no destination row written twice *within* the op,
+    MAJ arity odd >= 3 with one source per operand plane (duplicate
+    sources are legal — that is the paper's input-replication
+    identity), and single-source kinds carrying exactly one source.
     """
-    for i, op in enumerate(program.ops):
-        if not op.dsts:
-            continue  # cost-only record: nothing addressable to check
-        for role, addrs in (("source", op.srcs), ("destination", op.dsts)):
-            for r in addrs:
-                if not 0 <= r < n_rows:
-                    raise ProgramValidationError(
-                        f"{where}: {_label(i, op)} {role} row {r} is "
-                        f"outside the {n_rows}-row subarray image")
-        dup = sorted(r for r, c in collections.Counter(op.dsts).items()
-                     if c > 1)
-        if dup:
-            raise ProgramValidationError(
-                f"{where}: {_label(i, op)} writes destination row(s) "
-                f"{dup} more than once in a single op "
-                f"({n_rows}-row subarray image)")
-        if op.kind == "MAJ":
-            x = op.x or len(op.srcs)
-            if x % 2 == 0 or x < 3:
-                raise ProgramValidationError(
-                    f"{where}: {_label(i, op)} MAJ arity must be odd "
-                    f">= 3, got {x}")
-            if len(op.srcs) != x:
-                raise ProgramValidationError(
-                    f"{where}: {_label(i, op)} MAJ{x} carries "
-                    f"{len(op.srcs)} source rows (needs exactly {x})")
-        elif op.kind in _SINGLE_SRC and len(op.srcs) != 1:
-            raise ProgramValidationError(
-                f"{where}: {_label(i, op)} takes exactly one source "
-                f"row, got {len(op.srcs)}")
+    errors = tuple(f for f in check_ops(program, n_rows, where=where)
+                   if f.severity == ERROR)
+    if errors:
+        raise ProgramValidationError(errors[0].message, findings=errors)

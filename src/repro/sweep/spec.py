@@ -21,7 +21,7 @@ import dataclasses
 import hashlib
 import itertools
 import json
-from typing import Iterator, Optional
+from typing import Iterator
 
 from repro.core import calibration as cal
 

@@ -7,8 +7,7 @@ memory is one microbatch (plus remat policy inside the model).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.ckpt import checkpoint as ckpt

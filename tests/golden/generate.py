@@ -7,9 +7,13 @@ execution::
 
 Each fixture freezes (a) a canonical serialized Program, (b) the seed of
 its random initial (rows, words) state, (c) the expected final state
-computed by the per-op oracle interpreter, and (d) a ``megakernel``
+computed by the per-op oracle interpreter, (d) a ``megakernel``
 section pinning the lowered level-table structure (shapes, per-level
-slot counts, content digest) plus a digest of the expected final state.
+slot counts, content digest) plus a digest of the expected final state,
+and (e) a ``certificate`` section freezing the static analyzer's
+verdict (:func:`repro.analyze.certify` digest + per-pass error/warning
+counts) — so an analyzer change that silently alters what is checked,
+or a compiler change that alters the artifacts, moves a pinned digest.
 tests/test_compile_golden.py replays every fixture through per-op,
 fused, and megakernel execution on all backends: a scheduler or
 lowering change that reorders ops but alters results — or silently
@@ -107,6 +111,22 @@ def _megakernel_section(prog, final: np.ndarray) -> dict:
     }
 
 
+def _certificate_section(prog) -> dict:
+    """Freeze the analyzer's certificate for schedule + lowering.
+
+    Deterministic: the digest covers program content, both artifact
+    digests, the analyzer version, and the per-pass finding counts —
+    ``python -m repro.analyze --golden`` and
+    ``tests/test_compile_golden.py`` both recompute and compare it.
+    """
+    from repro.analyze import certify
+    from repro.compile import build_schedule, lower_schedule
+
+    sched = build_schedule(prog)
+    cert = certify(prog, sched=sched, lowering=lower_schedule(sched))
+    return cert.to_dict()
+
+
 def main() -> None:
     from repro.backends import ExecutionContext, get_backend
 
@@ -127,6 +147,7 @@ def main() -> None:
             "ops": json.loads(prog.to_json()),
             "expected": ["".join(f"{w:08x}" for w in row) for row in final],
             "megakernel": _megakernel_section(prog, final),
+            "certificate": _certificate_section(prog),
         }
         path = os.path.join(out_dir, f"{name}.json")
         with open(path, "w") as f:

@@ -6,7 +6,6 @@ import pytest
 from _proptest import rand_u32, sweep
 from repro.core.errormodel import ErrorModel
 from repro.pud.arith import BitSerial, run_elementwise
-from repro.core import bitplanes as bp
 import jax.numpy as jnp
 
 

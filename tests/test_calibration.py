@@ -1,7 +1,5 @@
 """Pin every paper anchor the rest of the system calibrates against."""
 
-import math
-
 from repro.core import calibration as cal
 
 

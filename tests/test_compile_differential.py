@@ -14,7 +14,6 @@ import os
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from _proptest import rand_u32, sweep
 from repro.backends import ExecutionContext, get_backend

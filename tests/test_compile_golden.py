@@ -121,3 +121,28 @@ def test_serialization_roundtrip():
     again = Program.from_json(prog.to_json())
     assert again.ops == prog.ops
     assert again.histogram() == prog.histogram()
+
+
+@pytest.mark.parametrize(
+    "path", GOLDEN_FILES, ids=[os.path.basename(p)[:-5]
+                               for p in GOLDEN_FILES])
+def test_golden_certificate_is_frozen_and_deterministic(path):
+    """The frozen certificate section must reproduce bit-for-bit.
+
+    Recomputes the full static analysis (races, liveness, symbolic
+    equivalence over schedule AND lowering) and compares against the
+    fixture's pinned digest: an analyzer change that silently alters
+    what is checked — or a compiler change that alters the artifacts —
+    moves this digest and must go through fixture regeneration.
+    """
+    from repro.analyze import certify
+
+    doc, prog, _, _ = _load(path)
+    sched = build_schedule(prog)
+    lowering = lower_schedule(sched)
+    cert = certify(prog, sched=sched, lowering=lowering)
+    frozen = doc["certificate"]
+    assert cert.to_dict() == frozen
+    # Determinism: a second independent run lands on the same digest.
+    assert certify(prog, sched=sched, lowering=lowering).digest \
+        == frozen["digest"]

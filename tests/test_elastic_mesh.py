@@ -2,12 +2,11 @@
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_config
 from repro.dist.sharding import (DEFAULT_RULES, SERVE_RULES, axis_extent,
-                                 sharding_for, tree_shardings, use_rules)
-from repro.ft.elastic import make_mesh_from, plan_remesh, reshard
+                                 sharding_for, use_rules)
+from repro.ft.elastic import make_mesh_from, reshard
 from repro.launch.mesh import make_test_mesh
 from repro.models import model as M
 

@@ -22,8 +22,7 @@ from _proptest import rand_u32, sweep
 from repro.backends import ExecutionContext, get_backend
 from repro.compile import (MegaLowering, build_schedule, compile_elementwise,
                            lower_schedule, plan_vmem)
-from repro.compile.megakernel import (N_CONST_ROWS, ONE_ROW, TRASH_ROW,
-                                      ZERO_ROW)
+from repro.compile.megakernel import N_CONST_ROWS, TRASH_ROW, ZERO_ROW
 from repro.kernels.megakernel import run_lowering, schedule_exec_ref
 from repro.pud.isa import Program
 from repro.session import DramSession

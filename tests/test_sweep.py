@@ -12,7 +12,7 @@ import os
 import pytest
 
 from repro.core.errormodel import ErrorModel
-from repro.sweep import (ANALYTIC, RecordStore, SweepSpec, aggregate, plan,
+from repro.sweep import (RecordStore, SweepSpec, aggregate, plan,
                          presets, run_sweep, shard)
 from repro.sweep.run import main as sweep_cli
 
