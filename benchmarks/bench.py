@@ -10,7 +10,7 @@ via lowered level tables, see :mod:`repro.compile.megakernel`) — for
 the paper-motivated workloads: bit-serial adder / multiplier (§8.1)
 and the Multi-RowCopy secure-erase wave (§8.2).  Results land in a
 machine-readable ``BENCH_fused.json`` so the perf trajectory of the
-fusion layer is recorded run over run (schema ``repro-bench/fused-v3``
+fusion layer is recorded run over run (schema ``repro-bench/fused-v4``
 in ``docs/BENCH.md``).
 
 Usage::
@@ -19,14 +19,18 @@ Usage::
     python -m benchmarks.bench                    # full sizes
     python -m benchmarks.bench --backends oracle pallas sim
 
-Every row carries wall-clock timings, *structural* dispatch counts
-(measured in a scoped ``count_dispatches`` window per run, so workloads
-never leak counts into each other), the modelled launch overhead
-(dispatches x :data:`repro.pud.offload.KERNEL_LAUNCH_NS` — the
-command-stream cost the megakernel collapses), and the session
-compile-cache hits/misses of the fused paths; the CI gate asserts on
-the structural columns (megakernel <= 2 dispatches for add32/mul8,
-fused < per-op, >= 1 cache hit), which needs no timing stability.
+Every row carries wall-clock timings, *structural* dispatch counts and
+CostModel-priced energy (both measured in a scoped ``count_dispatches``
+window per run, so workloads never leak counts into each other), the
+modelled launch overhead (dispatches x
+:data:`repro.core.costmodel.KERNEL_LAUNCH_NS` — the command-stream cost
+the megakernel collapses), the session compile-cache hits/misses of the
+fused paths, and an ``offload`` block pricing the same program on the
+PUD side (time and joules for both, via
+:func:`repro.pud.offload.plan_program`); the CI gate asserts on the
+structural columns (megakernel <= 2 dispatches for add32/mul8, fused <
+per-op, megakernel energy <= fused <= per-op, >= 1 cache hit), which
+needs no timing stability.
 """
 
 from __future__ import annotations
@@ -41,7 +45,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from _bench_io import default_out, write_bench_json
 
-SCHEMA = "repro-bench/fused-v3"
+SCHEMA = "repro-bench/fused-v4"
 DEFAULT_OUT = default_out("BENCH_fused.json")
 
 
@@ -114,12 +118,12 @@ def _workloads(smoke: bool):
 
 # ----------------------------------------------------------------- driver
 def _timed(fn, session, reps: int):
-    """(wall_s per rep, final output, kernel launches per run).
+    """(wall_s per rep, final output, frozen dispatch/energy scope).
 
     The warm-up run (jit/pallas compile paths) executes inside its own
-    ``count_dispatches`` scope, so the launch count is exact for one
-    run — no dividing a shared counter across reps, no leakage from
-    whatever ran before.
+    ``count_dispatches`` scope, so the launch count — and the
+    CostModel-priced energy — is exact for one run: no dividing a
+    shared counter across reps, no leakage from whatever ran before.
     """
     import jax
 
@@ -130,13 +134,14 @@ def _timed(fn, session, reps: int):
     for _ in range(reps):
         out = fn()
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps, out, scope.count
+    return (time.perf_counter() - t0) / reps, out, scope
 
 
 def bench_program(name: str, prog, state, sessions, ref, reps: int):
     import numpy as np
 
-    from repro.pud.offload import KERNEL_LAUNCH_NS
+    from repro.core.costmodel import KERNEL_LAUNCH_NS
+    from repro.pud.offload import plan_program
 
     want = np.asarray(ref.run(prog, state))
     rows = []
@@ -152,11 +157,12 @@ def bench_program(name: str, prog, state, sessions, ref, reps: int):
             if mode != "per_op":  # per-op never touches the caches
                 cache0 = sess.cache.stats.snapshot()
                 low0 = sess.cache.lowering_stats.snapshot()
-            wall, out, dispatches = _timed(runner, sess, reps)
+            wall, out, scope = _timed(runner, sess, reps)
             modes[mode] = {
                 "wall_s": wall,
-                "dispatches": dispatches,
-                "launch_overhead_ns": dispatches * KERNEL_LAUNCH_NS,
+                "dispatches": scope.count,
+                "launch_overhead_ns": scope.count * KERNEL_LAUNCH_NS,
+                "energy_nj": scope.energy_nj,
                 "parity": bool((np.asarray(out) == want).all()),
             }
             if mode != "per_op":
@@ -169,6 +175,10 @@ def bench_program(name: str, prog, state, sessions, ref, reps: int):
                 modes[mode]["vmem"] = _vmem_plan(sess, prog, state)
         # The fused warm-up built (and cached) the schedule; reading the
         # level count back is a hit, never a second scheduling pass.
+        # The offload decision reuses the same cached schedule: the row
+        # records where this program would run, in ns AND nJ.
+        decision = plan_program(prog, state.shape[1] * 4, ctx=sess.ctx,
+                                sched=sess.schedule_for(prog))
         rows.append({
             "name": name,
             "backend": be_name,
@@ -184,6 +194,19 @@ def bench_program(name: str, prog, state, sessions, ref, reps: int):
             "megakernel_dispatch_reduction":
             modes["per_op"]["dispatches"]
             / max(modes["megakernel"]["dispatches"], 1),
+            "energy_reduction": modes["per_op"]["energy_nj"]
+            / max(modes["fused"]["energy_nj"], 1e-12),
+            "megakernel_energy_reduction":
+            modes["per_op"]["energy_nj"]
+            / max(modes["megakernel"]["energy_nj"], 1e-12),
+            "offload": {
+                "tpu_ns": decision.tpu_ns,
+                "pud_ns": decision.pud_ns,
+                "tpu_energy_nj": decision.tpu_energy_nj,
+                "pud_energy_nj": decision.pud_energy_nj,
+                "winner": decision.winner,
+                "winner_energy": decision.winner_energy,
+            },
         })
     return rows
 
@@ -263,14 +286,17 @@ def main(argv=None) -> int:
         flag = "" if ok else "  !! PARITY MISMATCH"
         print(f"  {r['name']:12s} [{r['backend']:7s}] "
               f"per-op {r['per_op']['wall_s']*1e3:8.1f} ms "
-              f"/{r['per_op']['dispatches']:5d} disp | fused "
+              f"/{r['per_op']['dispatches']:5d} disp "
+              f"/{r['per_op']['energy_nj']/1e3:9.1f} uJ | fused "
               f"{r['fused']['wall_s']*1e3:8.1f} ms "
               f"/{r['fused']['dispatches']:5d} disp | mega "
               f"{r['megakernel']['wall_s']*1e3:8.1f} ms "
-              f"/{r['megakernel']['dispatches']:5d} disp | "
+              f"/{r['megakernel']['dispatches']:5d} disp "
+              f"/{r['megakernel']['energy_nj']/1e3:9.1f} uJ | "
               f"{r['speedup']:5.2f}x wall, "
               f"{r['megakernel_dispatch_reduction']:5.1f}x mega "
-              f"dispatch{flag}")
+              f"dispatch, {r['megakernel_energy_reduction']:5.1f}x mega "
+              f"energy{flag}")
     cc, lc = doc["compile_cache"], doc["lowering_cache"]
     print(f"[bench] compile cache: {cc['hits']} hits / {cc['misses']} "
           f"misses ({cc['hit_rate']*100:.0f}% hit rate); lowering cache: "

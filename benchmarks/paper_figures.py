@@ -273,6 +273,60 @@ def fig17_cold_boot():
     return rows
 
 
+# Fig 18 (extension): energy per execution mode ---------------------------
+
+
+def fig18_energy_modes():
+    """Kill-Llama-style energy-savings view over the execution paths.
+
+    Runs the same §8.1 programs (32-bit adder, 8-bit multiplier)
+    through the ``pallas`` session's three executors — per-op, fused,
+    megakernel — and reports the CostModel-priced TPU-side energy each
+    accrues (launch round-trips at board power + HBM traffic), next to
+    the DRAM-side energy of executing the identical program in-situ
+    under the Fig. 5 power model.  The headline ratios mirror the
+    dispatch-reduction story in joules: fusion amortizes launch energy
+    exactly as SiMRA amortizes activation energy (Obs 5 / PULSAR).
+    """
+    from repro.core.costmodel import COST
+
+    session = DramSession("pallas", name="fig18")
+    errors = ErrorModel("H")
+    rng = np.random.default_rng(0)
+    rows = []
+    for wl, op, nbits, lanes in (("add32", "add", 32, 64),
+                                 ("mul8", "mul", 8, 64)):
+        a = rng.integers(0, 2**nbits, lanes, dtype=np.uint32)
+        b = rng.integers(0, 2**nbits, lanes, dtype=np.uint32)
+        if op == "mul":
+            a, b = a & 0xFF, b & 0xFF
+        _, prog = session.elementwise(op, a, b, tier=5, n_act=32)
+        state = np.zeros((prog.n_rows(), (lanes + 31) // 32), np.uint32)
+        energies = {}
+        for mode, run in (
+                ("per_op", lambda: session.run(prog, state)),
+                ("fused", lambda: session.run_fused(prog, state)),
+                ("megakernel", lambda: session.run_fused(
+                    prog, state, mode="megakernel"))):
+            with session.count_dispatches() as scope:
+                run()
+            energies[mode] = scope.energy_nj
+            rows.append((f"fig18_{wl}_{mode}", 0.0,
+                         f"energy_nj={scope.energy_nj:.1f};"
+                         f"dispatches={scope.count}"))
+        pud_nj = prog.energy_nj(errors)
+        rows.append((f"fig18_{wl}_pud_dram", 0.0, f"energy_nj={pud_nj:.1f}"))
+        rows.append((f"fig18_{wl}_savings", 0.0,
+                     f"fused_vs_per_op="
+                     f"{energies['per_op']/energies['fused']:.2f};"
+                     f"mega_vs_per_op="
+                     f"{energies['per_op']/energies['megakernel']:.2f};"
+                     f"pud_vs_per_op={energies['per_op']/pud_nj:.2f}"))
+    rows.append(("fig18_dispatch_energy_nj", 0.0,
+                 f"per_launch={COST.dispatch_energy_nj(1):.1f}"))
+    return rows
+
+
 # Table 1/2: tested devices ------------------------------------------------
 
 

@@ -36,6 +36,7 @@ def main() -> None:
         pf.fig15_spice_mc,
         pf.fig16_microbench_speedups,
         pf.fig17_cold_boot,
+        pf.fig18_energy_modes,
         pf.table1_devices,
         kernel_bench.kernel_benchmarks,
     ):

@@ -13,12 +13,14 @@ ladder of offered loads, in two modes over the *same* requests:
 
 Each (load, mode) point records wall time, throughput, p50/p99 request
 latency, executed batches, batch occupancy, *structural* dispatch
-counts (per-batch ``DispatchScope`` windows summed by the SLO monitor)
-and the schedule-cache window.  Results land in
-``BENCH_serve.json`` (schema ``repro-bench/serve-v1``, documented in
-``docs/BENCH.md``); ``scripts/ci.sh`` gates on the structural columns —
-batched throughput >= sequential, batched dispatches < sequential,
-cache hit rate > 0, p99 recorded.
+counts and CostModel-priced energy (per-batch ``DispatchScope`` windows
+summed by the SLO monitor) and the schedule-cache window.  A nonzero
+``--tick-window`` exercises ``ServiceConfig.tick_window_s`` — the
+cross-tick coalescing wait — on the sync ``serve()`` path.  Results
+land in ``BENCH_serve.json`` (schema ``repro-bench/serve-v2``,
+documented in ``docs/BENCH.md``); ``scripts/ci.sh`` gates on the
+structural columns — batched throughput >= sequential, batched
+dispatches AND energy < sequential, cache hit rate > 0, p99 recorded.
 
 Usage::
 
@@ -38,7 +40,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 from _bench_io import default_out, write_bench_json
 
-SCHEMA = "repro-bench/serve-v1"
+SCHEMA = "repro-bench/serve-v2"
 DEFAULT_OUT = default_out("BENCH_serve.json")
 
 
@@ -68,14 +70,16 @@ def _requests(offered: int, rows: int, words: int, seed: int):
 
 
 def bench_point(offered: int, mode: str, backend: str, rows: int,
-                words: int, rounds: int) -> dict:
+                words: int, rounds: int,
+                tick_window_s: float = 0.0) -> dict:
     import time
 
     from repro.serve import PudService, ServiceConfig
 
     svc = PudService(ServiceConfig(
         backend=backend, pool_size=2, coalesce=(mode == "batched"),
-        max_batch=2 * offered, queue_depth=max(4 * offered, 64)))
+        max_batch=2 * offered, queue_depth=max(4 * offered, 64),
+        tick_window_s=tick_window_s))
     svc.serve(_requests(offered, rows, words, seed=0))  # warm-up round
     svc.reset_slo()
 
@@ -100,6 +104,9 @@ def bench_point(offered: int, mode: str, backend: str, rows: int,
         "batches": snap.batches,
         "batch_occupancy": snap.batch_occupancy,
         "dispatches": snap.dispatches,
+        "energy_nj": snap.energy_nj,
+        "energy_per_req_nj": snap.energy_nj / max(snap.completed, 1),
+        "tick_window_s": tick_window_s,
         "cache": snap.cache,
         "shed": snap.shed,
         "slo": snap.to_dict(),
@@ -120,11 +127,17 @@ def main(argv=None) -> int:
                     help="offered concurrent requests per class per round")
     ap.add_argument("--rounds", type=int, default=None,
                     help="timed rounds per point (default: 2 smoke, 3 full)")
+    ap.add_argument("--tick-window", type=float, default=None,
+                    help="ServiceConfig.tick_window_s coalescing wait "
+                         "(default: 1 ms smoke — exercising the sync-path "
+                         "window — 0 full)")
     args = ap.parse_args(argv)
 
     loads = args.loads or ([2, 8] if args.smoke else [4, 16, 64])
     rounds = args.rounds or (2 if args.smoke else 3)
     rows, words = (4, 64) if args.smoke else (8, 256)
+    tick_window = (args.tick_window if args.tick_window is not None
+                   else (0.001 if args.smoke else 0.0))
 
     points = []
     for offered in loads:
@@ -132,13 +145,15 @@ def main(argv=None) -> int:
             print(f"[serve-bench] offered={offered} mode={mode} ...",
                   flush=True)
             points.append(bench_point(offered, mode, args.backend,
-                                      rows, words, rounds))
+                                      rows, words, rounds,
+                                      tick_window_s=tick_window))
 
     doc = {
         "schema": SCHEMA,
         "smoke": args.smoke,
         "backend": args.backend,
         "rounds": rounds,
+        "tick_window_s": tick_window,
         "workload": {
             "classes": ["heal(x3)", "erase(mrc31)"],
             "heal_rows": rows,
@@ -155,8 +170,8 @@ def main(argv=None) -> int:
               f"{p['throughput_rps']:8.1f} req/s | p50 "
               f"{p['p50_ms']:7.1f} ms p99 {p['p99_ms']:7.1f} ms | "
               f"{p['dispatches']:4d} disp / {p['batches']:3d} batches "
-              f"(occ {occ:4.1f}) | cache "
-              f"{p['cache']['hit_rate']*100:3.0f}%")
+              f"(occ {occ:4.1f}) | {p['energy_per_req_nj']/1e3:6.1f} "
+              f"uJ/req | cache {p['cache']['hit_rate']*100:3.0f}%")
 
     # Structural self-check (the CI gate re-asserts this from the JSON).
     bad = []
@@ -169,6 +184,10 @@ def main(argv=None) -> int:
             bad.append(f"load {offered}: batched dispatches "
                        f"{bat['dispatches']} >= sequential "
                        f"{seq['dispatches']}")
+        if bat["energy_nj"] > seq["energy_nj"]:
+            bad.append(f"load {offered}: batched energy "
+                       f"{bat['energy_nj']:.0f} nJ > sequential "
+                       f"{seq['energy_nj']:.0f} nJ")
     if bad:
         print("[serve-bench] STRUCTURAL REGRESSION:", *bad, sep="\n  ")
     return 1 if bad else 0

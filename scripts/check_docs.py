@@ -11,13 +11,13 @@ README.md), plus the *module docstrings* of ``examples/*.py`` and
 
 and fails listing every reference that does not resolve to a real file
 under the repo.  It also cross-checks the ``repro-bench/*`` result
-schema ids: every id mentioned in the docs must be one a benchmark
-script actually writes (a ``SCHEMA = "repro-bench/..."`` assignment),
-and every written id must be documented — so a schema bump that
-forgets ``docs/BENCH.md`` (or vice versa) fails here instead of
-surprising a downstream consumer.  Keeps the docs layer honest as
-modules move: CI runs this after the test suite (see
-``scripts/ci.sh``).
+schema ids three ways: every id mentioned in the docs or gated by
+``scripts/ci.sh`` must be one a benchmark script actually writes (a
+``SCHEMA = "repro-bench/..."`` assignment), and every written id must
+appear in both — so a schema bump that forgets ``docs/BENCH.md`` or
+the CI gate fails here instead of surprising a downstream consumer.
+Keeps the docs layer honest as modules move: CI runs this after the
+test suite (see ``scripts/ci.sh``).
 """
 
 from __future__ import annotations
@@ -73,7 +73,14 @@ def module_docstring(path: str) -> str:
 
 
 def check_schema_ids() -> tuple[list[str], int]:
-    """Cross-check repro-bench/* ids: docs vs bench-script writers."""
+    """Cross-check repro-bench/* ids: docs and CI vs bench-script writers.
+
+    Three-way consistency: every id the docs (or the ``scripts/ci.sh``
+    bench gates) reference must be one a benchmark actually writes, and
+    every written id must appear in both — so a schema bump that
+    forgets ``docs/BENCH.md`` or the CI gate's ``assert doc["schema"]``
+    fails here instead of surprising a downstream consumer.
+    """
     written: set[str] = set()
     for path in sorted(glob.glob(os.path.join(REPO, "benchmarks", "*.py"))):
         with open(path) as f:
@@ -83,11 +90,17 @@ def check_schema_ids() -> tuple[list[str], int]:
             [os.path.join(REPO, "README.md")]:
         with open(path) as f:
             documented.update(SCHEMA_RE.findall(f.read()))
+    with open(os.path.join(REPO, "scripts", "ci.sh")) as f:
+        gated = set(SCHEMA_RE.findall(f.read()))
     problems = [f"docs mention schema {s!r} that no benchmark writes"
                 for s in sorted(documented - written)]
     problems += [f"benchmarks write schema {s!r} never documented in "
                  f"docs/*.md" for s in sorted(written - documented)]
-    return problems, len(written | documented)
+    problems += [f"scripts/ci.sh gates on schema {s!r} that no benchmark "
+                 f"writes" for s in sorted(gated - written)]
+    problems += [f"benchmarks write schema {s!r} that scripts/ci.sh never "
+                 f"gates on" for s in sorted(written - gated)]
+    return problems, len(written | documented | gated)
 
 
 def main() -> int:

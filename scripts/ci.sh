@@ -88,7 +88,7 @@ PYTHONPATH=src python - "$BENCH_CI_ROOT/BENCH_fused.json" <<'PY'
 import json, sys
 
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == "repro-bench/fused-v3", doc["schema"]
+assert doc["schema"] == "repro-bench/fused-v4", doc["schema"]
 rows = {(r["name"], r["backend"]): r for r in doc["workloads"]}
 assert len({n for n, _ in rows}) >= 3, sorted(rows)
 add = rows[("add32", "pallas")]
@@ -98,6 +98,23 @@ assert add["fused"]["dispatches"] < add["per_op"]["dispatches"], add
 assert add["fused"]["dispatches"] <= add["n_levels"], add
 assert all(r["per_op"]["parity"] and r["fused"]["parity"]
            and r["megakernel"]["parity"] for r in doc["workloads"])
+# Energy gate: every row carries CostModel-priced energy; on the pallas
+# executor it is positive and ordered megakernel <= fused <= per-op for
+# add32 (fewer launches -> fewer joules, the PULSAR amortization story).
+for r in doc["workloads"]:
+    for m in ("per_op", "fused", "megakernel"):
+        assert "energy_nj" in r[m] and r[m]["energy_nj"] >= 0, (r["name"], m)
+    assert r["offload"]["pud_energy_nj"] > 0, r["name"]
+    assert r["offload"]["winner_energy"] in ("pud", "tpu"), r["name"]
+    if r["backend"] == "pallas":
+        for m in ("per_op", "fused", "megakernel"):
+            assert r[m]["energy_nj"] > 0, (r["name"], m)
+add_e = {m: add[m]["energy_nj"] for m in ("per_op", "fused", "megakernel")}
+assert 0 < add_e["megakernel"] <= add_e["fused"] <= add_e["per_op"], add_e
+print(f"energy gate OK: add32 per-op {add_e['per_op']/1e3:.0f} uJ >= "
+      f"fused {add_e['fused']/1e3:.0f} uJ >= megakernel "
+      f"{add_e['megakernel']/1e3:.0f} uJ; offload winner_energy "
+      f"{add['offload']['winner_energy']}")
 # Session compile cache: repeated programs must re-use their schedule.
 cc = doc["compile_cache"]
 assert cc["hits"] >= 1, cc
@@ -138,10 +155,13 @@ PYTHONPATH=src python - "$SERVE_CI_ROOT/BENCH_serve.json" <<'PY'
 import json, sys
 
 doc = json.load(open(sys.argv[1]))
-assert doc["schema"] == "repro-bench/serve-v1", doc["schema"]
+assert doc["schema"] == "repro-bench/serve-v2", doc["schema"]
 points = {(p["offered"], p["mode"]): p for p in doc["points"]}
 loads = sorted({o for o, _ in points})
 assert loads, points
+# The smoke run exercises the sync-path coalescing window (bugfix:
+# tick_window_s used to be honored only on the asyncio path).
+assert doc["tick_window_s"] > 0, doc["tick_window_s"]
 for o in loads:
     seq, bat = points[(o, "sequential")], points[(o, "batched")]
     # Structural gate (no timing stability needed): coalescing must cut
@@ -152,6 +172,14 @@ for o in loads:
     # p99 latency must be recorded (non-null) at every point.
     assert seq["p99_ms"] is not None and bat["p99_ms"] is not None, o
     assert seq["shed"] == 0 and bat["shed"] == 0, o
+    # Energy gate: present and positive at every point, and coalescing
+    # must save joules, not just dispatches.
+    assert seq["energy_nj"] > 0 and bat["energy_nj"] > 0, o
+    assert seq["energy_per_req_nj"] > 0 and bat["energy_per_req_nj"] > 0, o
+    assert bat["energy_nj"] < seq["energy_nj"], \
+        (o, bat["energy_nj"], seq["energy_nj"])
+    assert all(p["tick_window_s"] == doc["tick_window_s"]
+               for p in (seq, bat)), o
 # Throughput gate at the smoke load point (largest load; widest margin).
 o = loads[-1]
 seq, bat = points[(o, "sequential")], points[(o, "batched")]
@@ -160,10 +188,13 @@ assert bat["throughput_rps"] >= seq["throughput_rps"], \
 # The batched service must be hitting the shared schedule cache.
 assert bat["cache"]["hit_rate"] > 0, bat["cache"]
 print(f"serve gate OK: load {o} batched {bat['throughput_rps']:.0f} req/s"
-      f" / {bat['dispatches']} dispatches vs sequential "
-      f"{seq['throughput_rps']:.0f} req/s / {seq['dispatches']}; "
+      f" / {bat['dispatches']} dispatches / "
+      f"{bat['energy_per_req_nj']/1e3:.0f} uJ/req vs sequential "
+      f"{seq['throughput_rps']:.0f} req/s / {seq['dispatches']} / "
+      f"{seq['energy_per_req_nj']/1e3:.0f} uJ/req; "
       f"occupancy {bat['batch_occupancy']:.1f}, cache hit rate "
-      f"{bat['cache']['hit_rate']*100:.0f}%")
+      f"{bat['cache']['hit_rate']*100:.0f}%, tick window "
+      f"{doc['tick_window_s']*1e3:.0f} ms")
 PY
 rm -rf "$SERVE_CI_ROOT"
 

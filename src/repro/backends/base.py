@@ -42,25 +42,36 @@ from repro.pud.isa import Program
 
 
 class DispatchScope:
-    """A window over a backend's kernel-launch counter.
+    """A window over a backend's kernel-launch and energy counters.
 
     Produced by :meth:`Backend.count_dispatches`: ``.count`` is the
-    launches issued since the scope opened, frozen when the ``with``
-    block exits — so two workloads (bench rows, tests) each read their
-    own window of the monotonic counter instead of sharing one mutable
-    total that leaks across resets.
+    launches issued since the scope opened and ``.energy_nj`` the
+    modelled energy accrued (CostModel-priced: per-dispatch launch
+    energy + HBM traffic on accelerated backends, per-DRAM-command
+    Fig. 5 energy on the device-model backend), both frozen when the
+    ``with`` block exits — so two workloads (bench rows, tests) each
+    read their own window of the monotonic counters instead of sharing
+    one mutable total that leaks across resets.
     """
 
     def __init__(self, backend: "Backend"):
         self._backend = backend
         self._start = backend.dispatch_count
         self._stop: Optional[int] = None
+        self._energy_start = backend.energy_nj_total
+        self._energy_stop: Optional[float] = None
 
     @property
     def count(self) -> int:
         end = (self._backend.dispatch_count if self._stop is None
                else self._stop)
         return end - self._start
+
+    @property
+    def energy_nj(self) -> float:
+        end = (self._backend.energy_nj_total if self._energy_stop is None
+               else self._energy_stop)
+        return end - self._energy_start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,24 +139,32 @@ class Backend(abc.ABC):
         #: Only accelerated backends increment it; it is the structural
         #: metric the fusion layer optimizes and repro.bench records.
         self.dispatch_count = 0
+        #: Modelled energy (nJ) accrued so far, priced by
+        #: :data:`repro.core.costmodel.COST`: the ``pallas`` backend
+        #: accrues launch + HBM-traffic energy per kernel dispatch, the
+        #: ``sim`` backend Fig. 5 command energy per DRAM op.  The
+        #: ``oracle`` reference accrues nothing (it models no hardware).
+        self.energy_nj_total = 0.0
 
     def reset_dispatches(self) -> None:
-        """Zero the process-lifetime counter.
+        """Zero the process-lifetime counters (launches AND energy).
 
         Prefer :meth:`count_dispatches` for measurement — resetting a
         shared counter inside someone else's measurement window corrupts
         their count; a scope never does.
         """
         self.dispatch_count = 0
+        self.energy_nj_total = 0.0
 
     @contextlib.contextmanager
     def count_dispatches(self):
-        """Scoped kernel-launch counting.
+        """Scoped kernel-launch and energy counting.
 
         Yields a :class:`DispatchScope` whose ``.count`` is the
-        launches issued inside the ``with`` block (frozen at exit).
-        Scopes nest and sequence independently, so concurrent bench
-        workloads and tests cannot leak counts into each other.
+        launches issued — and ``.energy_nj`` the modelled energy accrued
+        — inside the ``with`` block (frozen at exit).  Scopes nest and
+        sequence independently, so concurrent bench workloads and tests
+        cannot leak counts into each other.
 
         >>> with backend.count_dispatches() as scope:
         ...     backend.run_fused(program, state)
@@ -156,6 +175,7 @@ class Backend(abc.ABC):
             yield scope
         finally:
             scope._stop = self.dispatch_count
+            scope._energy_stop = self.energy_nj_total
 
     # ------------------------------------------------------------ protocol
     @abc.abstractmethod

@@ -19,7 +19,10 @@ ONE ``pallas_call`` scans end-to-end, VMEM-resident, column-blocked
 against ``Capabilities.vmem_budget_bytes`` when the image is too wide.
 ``self.dispatch_count`` tracks real kernel launches, which is the
 structural metric ``benchmarks/bench.py`` and the CI perf gate assert
-on.
+on; each launch also accrues :data:`repro.core.costmodel.COST`-priced
+energy (launch round-trip at board power + HBM traffic) into
+``self.energy_nj_total``, so fusion's dispatch savings show up in
+joules too.
 """
 
 from __future__ import annotations
@@ -33,6 +36,7 @@ import numpy as np
 
 from repro.backends.base import Backend, Capabilities
 from repro.core import calibration as cal
+from repro.core.costmodel import COST
 from repro.kernels.bitserial.ops import bitserial_add
 from repro.kernels.majx.ops import majx as majx_kernel
 from repro.kernels.mismatch.ops import mismatch_count
@@ -58,32 +62,43 @@ class PallasBackend(Backend):
             vmem_budget_bytes=self.ctx.vmem_budget_bytes,
         )
 
+    def _launch(self, n_bytes: float) -> None:
+        """Account one kernel launch: bump the dispatch counter and
+        accrue its CostModel energy — the launch round-trip at board
+        power plus the HBM access energy of the kernel's ``n_bytes`` of
+        operand + result traffic."""
+        self.dispatch_count += 1
+        self.energy_nj_total += (COST.dispatch_energy_nj(1)
+                                 + COST.hbm_energy_nj(n_bytes))
+
     def majx(self, planes: jax.Array, x: Optional[int] = None,
              n_act: Optional[int] = None) -> jax.Array:
-        self.dispatch_count += 1
+        out_words = planes.size // planes.shape[0]
+        self._launch((planes.size + out_words) * 4)
         return majx_kernel(planes, interpret=self.ctx.interpret,
                            block_r=self.ctx.block_r,
                            block_c=self.ctx.block_c)
 
     def majx_batch(self, planes: jax.Array) -> jax.Array:
         """(B, X, R, C) -> (B, R, C) in one vmapped kernel dispatch."""
-        self.dispatch_count += 1
+        planes = jnp.asarray(planes, jnp.uint32)
+        self._launch((planes.size + planes.size // planes.shape[1]) * 4)
         fn = functools.partial(majx_kernel, interpret=self.ctx.interpret,
                                block_r=self.ctx.block_r,
                                block_c=self.ctx.block_c)
-        return jax.vmap(fn)(jnp.asarray(planes, jnp.uint32))
+        return jax.vmap(fn)(planes)
 
     def rowcopy(self, src: jax.Array, n_dst: int) -> jax.Array:
-        self.dispatch_count += 1
+        self._launch(src.size * (1 + n_dst) * 4)
         return fanout(src, n_dst, interpret=self.ctx.interpret,
                       block_r=self.ctx.block_r, block_c=self.ctx.block_c)
 
     def mismatch(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        self.dispatch_count += 1
+        self._launch((jnp.asarray(a).size + jnp.asarray(b).size) * 4)
         return mismatch_count(a, b, interpret=self.ctx.interpret)
 
     def add_planes(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        self.dispatch_count += 1
+        self._launch(3 * jnp.asarray(a).size * 4)
         return bitserial_add(a, b, interpret=self.ctx.interpret)
 
     # ------------------------------------------------- fused program path
@@ -142,7 +157,7 @@ class PallasBackend(Backend):
         rows, words = state.shape
         plan = plan_vmem(lowering, rows, words, self.ctx.vmem_budget_bytes,
                          block_r=self.ctx.block_r)
-        self.dispatch_count += 1
+        self._launch(2 * rows * words * 4)  # image in + image out
         return run_lowering(lowering, state, block_c=plan.block_c,
                             interpret=self.ctx.interpret)
 

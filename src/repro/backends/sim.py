@@ -21,6 +21,7 @@ from repro.backends.context import ExecutionContext
 from repro.core import calibration as cal
 from repro.core import majx as mj
 from repro.core import rowcopy as rc
+from repro.core.costmodel import COST
 from repro.core.subarray import DeviceProfile, Subarray
 from repro.kernels.mismatch.ref import mismatch_count_ref
 
@@ -39,6 +40,22 @@ class SimBackend(Backend):
         super().__init__(ctx)
         self._pools: dict[int, list[Subarray]] = {}
         self._rr = 0  # round-robin cursor over the pool
+        #: Per-(kind, x, n_act) command energy, memoized — the context
+        #: (and so the calibration point) is frozen for this backend's
+        #: lifetime, so each command's Fig. 5 energy is a constant.
+        self._energy_cache: dict[tuple[str, int, int], float] = {}
+
+    def _accrue(self, kind: str, *, x: int = 0, n_act: int = 0) -> None:
+        """Accrue one DRAM command's Fig. 5 energy (retry-aware under
+        this context's calibration point; single-issue when ideal)."""
+        key = (kind, x, n_act)
+        e = self._energy_cache.get(key)
+        if e is None:
+            errors = None if self.ctx.ideal else self.ctx.error_model
+            e = COST.energy_nj(kind, x=x, n_act=n_act, errors=errors,
+                               **self.ctx.env())
+            self._energy_cache[key] = e
+        self.energy_nj_total += e
 
     def capabilities(self) -> Capabilities:
         anchor = cal.DEVICE_ANCHORS[self.ctx.mfr]
@@ -89,6 +106,7 @@ class SimBackend(Backend):
         t = self.ctx.timings
 
         def one(stack: jax.Array) -> jax.Array:  # (X, words)
+            self._accrue("MAJ", x=x, n_act=n)
             sa = self._subarray(stack.shape[-1])
             return mj.majx(sa, list(stack), n, t1_ns=t.majx_t1,
                            t2_ns=t.majx_t2, pattern=self.ctx.pattern)
@@ -109,6 +127,7 @@ class SimBackend(Backend):
                 remaining = n_dst - len(out)
                 n_act = max(l for l in cal.N_ACT_LEVELS
                             if l <= remaining + 1)
+                self._accrue("MRC", n_act=n_act)
                 _, dests = rc.multi_rowcopy(sa, row, n_act, t1_ns=t.mrc_t1,
                                             t2_ns=t.mrc_t2, base_row=base)
                 out.extend(sa.read_row(d) for d in dests[:remaining])
@@ -140,6 +159,7 @@ class SimBackend(Backend):
     # ------------------------------------------------- device-model hooks
     def _copy(self, plane: jax.Array) -> jax.Array:
         def one(row: jax.Array) -> jax.Array:
+            self._accrue("COPY")
             sa = self._subarray(row.shape[-1])
             sa.write_row(0, row)
             rc.rowclone(sa, 0, 1)
@@ -151,9 +171,21 @@ class SimBackend(Backend):
         # NOT is a complement-row copy (Ambit-style): clone the staged
         # complement so the op pays RowClone error semantics.
         def one(row: jax.Array) -> jax.Array:
+            self._accrue("NOT")
             sa = self._subarray(row.shape[-1])
             sa.write_row(0, ~jnp.asarray(row, jnp.uint32))
             rc.rowclone(sa, 0, 1)
             return sa.read_row(1)
 
         return self._per_row(one, plane)
+
+    def _frac(self, dsts: jax.Array, state: jax.Array) -> jax.Array:
+        self._accrue("FRAC")
+        return super()._frac(dsts, state)
+
+    def _exec_op(self, op, state: jax.Array) -> jax.Array:
+        # Row I/O is value-neutral in the image but not in joules: the
+        # bus transfer pays WR/RD power for the full row time (Fig. 5).
+        if op.kind in ("WR", "RD"):
+            self._accrue(op.kind)
+        return super()._exec_op(op, state)

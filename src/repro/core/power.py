@@ -40,15 +40,39 @@ def simra_power_w(n_act: int) -> float:
     return p2 + (p32 - p2) * min(max(w, 0.0), 1.0)
 
 
+#: Lazily-built Fig. 5 table (standard ops + the calibrated SIMRA_N
+#: series).  Built once; ``power_table()`` hands out copies so callers
+#: can't corrupt the cache.
+_TABLE_CACHE: dict[str, float] | None = None
+
+
+def _table() -> dict[str, float]:
+    global _TABLE_CACHE
+    if _TABLE_CACHE is None:
+        out = dict(STANDARD_POWER_W)
+        for n in cal.N_ACT_LEVELS:
+            out[f"SIMRA_{n}"] = simra_power_w(n)
+        _TABLE_CACHE = out
+    return _TABLE_CACHE
+
+
 def power_table() -> dict[str, float]:
-    """All Fig. 5 series in one dict (benchmark output)."""
-    out = dict(STANDARD_POWER_W)
-    for n in cal.N_ACT_LEVELS:
-        out[f"SIMRA_{n}"] = simra_power_w(n)
-    return out
+    """All Fig. 5 series in one dict (benchmark output; a fresh copy)."""
+    return dict(_table())
 
 
 def energy_nj(op: str, duration_ns: float) -> float:
-    """Energy (nJ) of holding ``op`` power for ``duration_ns``."""
-    table = power_table()
-    return table[op] * duration_ns
+    """Energy (nJ) of holding ``op`` power for ``duration_ns``.
+
+    W x ns = nJ exactly; raises :class:`ValueError` naming the valid
+    series for ops outside the calibrated table (e.g. ``SIMRA_3`` —
+    only the measured :data:`~repro.core.calibration.N_ACT_LEVELS`
+    activation counts appear in Fig. 5).
+    """
+    table = _table()
+    try:
+        return table[op] * duration_ns
+    except KeyError:
+        raise ValueError(
+            f"unknown power-table op {op!r}; valid ops: "
+            f"{', '.join(sorted(table))}") from None

@@ -24,7 +24,10 @@ Sources & methodology (CPU container, TPU v5e-like target):
   lives inside the scan body (op_name metadata contains "/while/").
 * ``memory_analysis()`` of the deploy compile proves per-chip fit.
 
-Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+Hardware constants (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI)
+come from the one :data:`repro.core.costmodel.COST` model, shared with
+the PUD offload planner so the two can never disagree; the names below
+are re-exports, not definitions.
 """
 
 from __future__ import annotations
@@ -33,10 +36,11 @@ import dataclasses
 import re
 from typing import Optional
 
-
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
+from repro.core.costmodel import (
+    HBM_BW as HBM_BW,
+    ICI_BW as ICI_BW,
+    PEAK_FLOPS as PEAK_FLOPS,
+)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -14,8 +14,8 @@ import collections
 import dataclasses
 import json
 
-from repro.core.errormodel import ErrorModel, expected_retries
-from repro.pud import latency as lat
+from repro.core.costmodel import COST
+from repro.core.errormodel import ErrorModel
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,55 +84,14 @@ class Program:
         subarray, as in the paper's tightly-scheduled §8.1 programs.
         ``best_group=True`` uses the best-row-group success rates the case
         studies select (calibration.MAJX_BEST_GROUP_SUCCESS).
-        """
-        from repro.core import calibration as cal
 
-        total = 0.0
-        for op in self.ops:
-            if op.kind == "MAJ":
-                if best_group:
-                    s = cal.MAJX_BEST_GROUP_SUCCESS[errors.mfr].get(op.x, 0.005)
-                else:
-                    s = errors.majx_success(op.x, op.n_act, **env)
-                issue = (lat.LAT.majx_apa if pipelined
-                         else lat.majx_issue_ns(op.x, op.n_act))
-                total += issue * expected_retries(s)
-            elif op.kind == "MRC":
-                s = errors.mrc_success(op.n_act - 1, **env)
-                total += lat.LAT.mrc * expected_retries(s)
-            elif op.kind in ("NOT", "COPY"):
-                s = errors.mrc_success(1, t1=36.0, t2=6.0, **env)
-                total += lat.LAT.rowclone * expected_retries(s)
-            elif op.kind == "FRAC":
-                total += lat.LAT.frac
-            elif op.kind == "WR":
-                total += lat.LAT.wr_row
-            elif op.kind == "RD":
-                total += lat.LAT.rd_row
-            else:
-                raise ValueError(f"unknown op kind {op.kind}")
-        return total
+        Delegates to the shared :data:`repro.core.costmodel.COST` — the
+        same model that prices the TPU side of offload decisions.
+        """
+        return COST.program_latency_ns(self, errors, pipelined=pipelined,
+                                       best_group=best_group, **env)
 
     def energy_nj(self, errors: ErrorModel, **env) -> float:
-        """Energy from the Fig.-5 power model over the schedule."""
-        from repro.core import power as pw
-
-        total = 0.0
-        for op in self.ops:
-            if op.kind == "MAJ":
-                s = errors.majx_success(op.x, op.n_act, **env)
-                t = lat.majx_issue_ns(op.x, op.n_act) * expected_retries(s)
-                total += pw.simra_power_w(op.n_act) * t
-            elif op.kind == "MRC":
-                s = errors.mrc_success(op.n_act - 1, **env)
-                t = lat.LAT.mrc * expected_retries(s)
-                total += pw.simra_power_w(op.n_act) * t
-            elif op.kind in ("NOT", "COPY"):
-                total += pw.STANDARD_POWER_W["ACT_PRE"] * lat.LAT.rowclone
-            elif op.kind == "FRAC":
-                total += pw.STANDARD_POWER_W["ACT_PRE"] * lat.LAT.frac
-            elif op.kind == "WR":
-                total += pw.STANDARD_POWER_W["WR"] * lat.LAT.wr_row
-            elif op.kind == "RD":
-                total += pw.STANDARD_POWER_W["RD"] * lat.LAT.rd_row
-        return total
+        """Energy from the Fig.-5 power model over the schedule (W x ns =
+        nJ; delegates to :data:`repro.core.costmodel.COST`)."""
+        return COST.program_energy_nj(self, errors, **env)

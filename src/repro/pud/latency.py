@@ -1,85 +1,34 @@
-"""Command-schedule latency & throughput model (DRAM Bender measurements, §8).
+"""Command-schedule latency & throughput model — compatibility shim.
 
-The paper's case studies measure the latency of each PUD operation by
-scheduling its DRAM command sequence on DRAM Bender, then analytically model
-microbenchmark execution time from the best measured throughput.  We model
-the same pipeline: per-op latency from the command IR timings
-(:mod:`repro.core.commands`), throughput from latency x the calibrated
-success rate (retry-until-success, geometric estimate; the paper instead
-selects the best-throughput row groups, which our expected-retry model
-approximates from the average success rate).
+The latency table and throughput helpers that historically lived here
+moved to :mod:`repro.core.costmodel` so the DRAM side and the TPU side
+of every offload decision are priced by ONE :class:`~repro.core.
+costmodel.CostModel` (latency *and* energy).  This module re-exports the
+public names so existing importers (`pud.isa`, `pud.offload`,
+`pud.device`, `pud.secure_erase`, the figure benches) keep working;
+new code should import from ``repro.core.costmodel`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
+from repro.core.costmodel import (
+    BUS_BYTES_PER_NS as BUS_BYTES_PER_NS,
+    LAT as LAT,
+    ROW_BITS as ROW_BITS,
+    T as T,
+    OpLatency as OpLatency,
+    majx_issue_ns as majx_issue_ns,
+    majx_throughput_bits_per_s as majx_throughput_bits_per_s,
+    mrc_throughput_rows_per_s as mrc_throughput_rows_per_s,
+)
 
-from repro.core import calibration as cal
-from repro.core import commands as cmd
-from repro.core.errormodel import ErrorModel, expected_retries
-
-T = cmd.NOMINAL
-
-#: Bits per DRAM row across one rank (8 KB row, §8.1 element layout).
-ROW_BITS = 65536
-#: Peak module bus bandwidth (DDR4-2400, 64-bit channel), bytes/ns.
-BUS_BYTES_PER_NS = 19.2
-
-
-@dataclasses.dataclass(frozen=True)
-class OpLatency:
-    """Latency (ns) of one issue of each PUD / support operation."""
-
-    #: APA in charge-share mode + row-cycle close: t1 + t2 + tRAS + tRP.
-    majx_apa: float = cal.MAJX_BEST_T1_NS + cal.MAJX_BEST_T2_NS + T.tras + T.trp
-    #: APA in Multi-RowCopy mode.  Base schedule tRAS + t2 + tRAS + tRP =
-    #: 90 ns plus a sense-amp drive extension for the 32-way fan-out;
-    #: the total is *calibrated* to Fig. 17's 20.87x (the paper measures
-    #: but does not print per-op latencies).
-    mrc: float = 138.1
-    #: Consecutive two-row activation (RowClone): tRAS + 6 + tRAS + tRP.
-    rowclone: float = T.tras + 6.0 + T.tras + T.trp
-    #: Frac neutral-row init: interrupted restore + precharge.  Calibrated
-    #: to Fig. 17's RowClone/Frac = 20.87/7.55 ratio (see above).
-    frac: float = 18.7 + T.trp
-    #: Writing a full row over the bus: tRCD + burst stream + tWR + tRP.
-    wr_row: float = T.trcd + (ROW_BITS / 8) / BUS_BYTES_PER_NS + T.twr + T.trp
-    #: Reading a full row: tRCD + burst stream + tRP.
-    rd_row: float = T.trcd + (ROW_BITS / 8) / BUS_BYTES_PER_NS + T.trp
-
-
-LAT = OpLatency()
-
-
-def majx_issue_ns(x: int, n_act: int) -> float:
-    """One MAJX issue including operand staging (§8.1 methodology).
-
-    RowClone the X operands into the group (X ops), Multi-RowCopy the
-    replicas (one MRC covers the whole group), Frac the neutral rows.
-    """
-    copies, neutral = cal.replication_plan(x, n_act)
-    setup = x * LAT.rowclone
-    if copies > 1:
-        setup += x * LAT.mrc  # one fan-out per operand
-    setup += neutral * LAT.frac
-    return setup + LAT.majx_apa
-
-
-def majx_throughput_bits_per_s(
-    x: int, n_act: int, errors: ErrorModel, **env
-) -> float:
-    """Correct result bits per second for one subarray issuing MAJX.
-
-    throughput = ROW_BITS * success / (issue latency * expected retries)
-    — the §8.1 analytical model with our calibrated surfaces.
-    """
-    s = errors.majx_success(x, n_act, **env)
-    t_ns = majx_issue_ns(x, n_act) * expected_retries(s)
-    return ROW_BITS * s / (t_ns * 1e-9)
-
-
-def mrc_throughput_rows_per_s(n_act: int, errors: ErrorModel, **env) -> float:
-    """Destination rows written per second by Multi-RowCopy."""
-    s = errors.mrc_success(n_act - 1, **env)
-    t_ns = LAT.mrc * expected_retries(s)
-    return (n_act - 1) / (t_ns * 1e-9)
+__all__ = [
+    "BUS_BYTES_PER_NS",
+    "LAT",
+    "ROW_BITS",
+    "T",
+    "OpLatency",
+    "majx_issue_ns",
+    "majx_throughput_bits_per_s",
+    "mrc_throughput_rows_per_s",
+]

@@ -4,19 +4,23 @@ The paper demonstrates that COTS DRAM computes bulk bitwise ops in-place.
 Whether offloading such an op from the TPU to a PUD-capable memory pays off
 depends on (a) the TPU roofline cost of the op (pure bandwidth for bitwise
 work) vs (b) the PUD command-schedule latency including success-rate-driven
-retries, and (c) the saved HBM traffic.  This planner prices both sides and
-is used by the serving engine's PUD hooks to decide where integrity votes
-and bulk bitmap ops run.  On TPU-only deployments it degrades to
-always-TPU (and the ``pallas`` backend runs the op), so the decision is
-advisory.
+retries, and (c) the saved HBM traffic.  This planner prices both sides —
+nanoseconds AND nanojoules (PULSAR's framing: many-row activation
+amortizes per-command *energy*) — and is used by the serving engine's
+PUD hooks to decide where integrity votes and bulk bitmap ops run.  On
+TPU-only deployments it degrades to always-TPU (and the ``pallas``
+backend runs the op), so the decision is advisory.
 
 Planning is keyed by the shared
 :class:`~repro.backends.context.ExecutionContext`: the calibration point
 (manufacturer, temperature, VPP) that fixes the retry counts comes from
 the same object the execution backends run under.
 
-TPU-side constants match the roofline setup in launch/roofline.py
-(TPU v5e-like: 197 TFLOP/s bf16, 819 GB/s HBM).
+All hardware constants come from the one
+:data:`repro.core.costmodel.COST` model (TPU v5e-like: 197 TFLOP/s bf16,
+819 GB/s HBM), shared with launch/roofline.py so the two can never
+drift; ``PEAK_FLOPS``/``HBM_BYTES_PER_S``/``KERNEL_LAUNCH_NS`` below
+are re-exports, not definitions.
 """
 
 from __future__ import annotations
@@ -26,17 +30,15 @@ from typing import Optional
 
 from repro.backends.context import ExecutionContext
 from repro.core import calibration as cal
+from repro.core import power as pw
+from repro.core.costmodel import (
+    COST,
+    HBM_BYTES_PER_S as HBM_BYTES_PER_S,
+    KERNEL_LAUNCH_NS as KERNEL_LAUNCH_NS,
+    PEAK_FLOPS as PEAK_FLOPS,
+)
 from repro.core.errormodel import ErrorModel, expected_retries
 from repro.pud import latency as lat
-
-HBM_BYTES_PER_S = 819e9
-PEAK_FLOPS = 197e12
-
-#: Host-side overhead per kernel launch (ns) on the TPU path — the
-#: quantity program fusion amortizes, exactly as PULSAR amortizes DRAM
-#: command overhead across simultaneously activated rows.  Order of a
-#: couple microseconds for a dispatch round-trip.
-KERNEL_LAUNCH_NS = 2_000.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,10 +49,22 @@ class OffloadDecision:
     pud_ns: float
     winner: str
     detail: str
+    #: Energy of each side (nJ, Fig. 5 power model on the PUD side; the
+    #: CostModel's dispatch + HBM-access terms on the TPU side) and the
+    #: side that wins on joules — which need not match ``winner``:
+    #: offload can save energy even when it costs nanoseconds.
+    tpu_energy_nj: float = 0.0
+    pud_energy_nj: float = 0.0
+    winner_energy: str = ""
 
     @property
     def speedup(self) -> float:
         return self.tpu_ns / self.pud_ns
+
+    @property
+    def energy_savings(self) -> float:
+        """TPU-over-PUD energy ratio (>1: offloading saves joules)."""
+        return self.tpu_energy_nj / self.pud_energy_nj
 
 
 def _resolve(ctx: Optional[ExecutionContext],
@@ -66,7 +80,15 @@ def tpu_bitwise_ns(n_bytes: int, n_operands: int = 2) -> float:
     """Bandwidth-bound cost of a bulk bitwise op on the TPU (read all
     operands + write result; bitwise VPU throughput never binds)."""
     traffic = n_bytes * (n_operands + 1)
-    return traffic / HBM_BYTES_PER_S * 1e9
+    return COST.hbm_ns(traffic)
+
+
+def tpu_bitwise_energy_nj(n_bytes: int, n_operands: int = 2) -> float:
+    """Energy of the same bulk bitwise op on the TPU: the DRAM access
+    energy of streaming all operands + the result through HBM (like
+    :func:`tpu_bitwise_ns`, launch overhead is excluded — bulk work
+    amortizes it)."""
+    return COST.hbm_energy_nj(n_bytes * (n_operands + 1))
 
 
 def pud_majx_ns(n_bytes: int, x: int, n_act: int,
@@ -86,6 +108,17 @@ def pud_majx_ns(n_bytes: int, x: int, n_act: int,
     return waves * per
 
 
+def pud_majx_energy_nj(n_bytes: int, x: int, n_act: int,
+                       errors: Optional[ErrorModel] = None,
+                       subarrays: int = 48, best_group: bool = True,
+                       ctx: Optional[ExecutionContext] = None) -> float:
+    """Energy of the MAJX sweep: SiMRA power at ``n_act`` (Fig. 5 /
+    Obs 5 — *below* REF at 32 rows) held for the retry-aware sweep
+    time."""
+    t = pud_majx_ns(n_bytes, x, n_act, errors, subarrays, best_group, ctx)
+    return pw.simra_power_w(n_act) * t
+
+
 def pud_mrc_ns(n_bytes: int, fanout: int,
                errors: Optional[ErrorModel] = None, subarrays: int = 48,
                ctx: Optional[ExecutionContext] = None) -> float:
@@ -95,6 +128,16 @@ def pud_mrc_ns(n_bytes: int, fanout: int,
     rows = -(-(n_bytes * 8) // lat.ROW_BITS)
     waves = -(-rows // subarrays)
     return waves * lat.LAT.mrc * expected_retries(s)
+
+
+def pud_mrc_energy_nj(n_bytes: int, fanout: int,
+                      errors: Optional[ErrorModel] = None,
+                      subarrays: int = 48,
+                      ctx: Optional[ExecutionContext] = None) -> float:
+    """Energy of the MRC sweep: SiMRA power at the activation count
+    (source + ``fanout`` destinations) over the retry-aware sweep time."""
+    t = pud_mrc_ns(n_bytes, fanout, errors, subarrays, ctx)
+    return pw.simra_power_w(fanout + 1) * t
 
 
 def tpu_program_ns(program, row_bytes: int, *, fused: bool = True,
@@ -117,8 +160,26 @@ def tpu_program_ns(program, row_bytes: int, *, fused: bool = True,
                   else sched.per_op_dispatches())
     rows_moved = sum(len(op.srcs) + len(op.dsts) for op in program.ops
                      if op.dsts and op.kind in VALUE_KINDS)
-    bw_ns = rows_moved * row_bytes / HBM_BYTES_PER_S * 1e9
-    return dispatches * KERNEL_LAUNCH_NS + bw_ns
+    return (COST.dispatch_overhead(dispatches)
+            + COST.hbm_ns(rows_moved * row_bytes))
+
+
+def tpu_program_energy_nj(program, row_bytes: int, *, fused: bool = True,
+                          sched=None) -> float:
+    """TPU-side energy of executing an addressed Program's bulk ops:
+    board power held across each kernel launch plus DRAM access energy
+    for the rows moved — the same dispatch/traffic split as
+    :func:`tpu_program_ns`, priced in nJ by the shared CostModel."""
+    from repro.compile.schedule import VALUE_KINDS, build_schedule
+
+    if sched is None:
+        sched = build_schedule(program)
+    dispatches = (sched.n_dispatches() if fused
+                  else sched.per_op_dispatches())
+    rows_moved = sum(len(op.srcs) + len(op.dsts) for op in program.ops
+                     if op.dsts and op.kind in VALUE_KINDS)
+    return (COST.dispatch_energy_nj(dispatches)
+            + COST.hbm_energy_nj(rows_moved * row_bytes))
 
 
 def plan_program(program, row_bytes: int,
@@ -142,6 +203,9 @@ def plan_program(program, row_bytes: int,
         sched = build_schedule(program)
     tpu = tpu_program_ns(program, row_bytes, fused=True, sched=sched)
     pud = program.latency_ns(errors, **ctx.env())
+    tpu_e = tpu_program_energy_nj(program, row_bytes, fused=True,
+                                  sched=sched)
+    pud_e = program.energy_nj(errors, **ctx.env())
     winner = "pud" if pud < tpu else "tpu"
     n_ops = sum(1 for op in program.ops if op.dsts)
     return OffloadDecision(
@@ -150,6 +214,8 @@ def plan_program(program, row_bytes: int,
         detail=(f"tpu fused: {sched.n_dispatches()} dispatches over "
                 f"{sched.n_levels} levels (vs {sched.per_op_dispatches()} "
                 f"per-op); pud: retry-aware command schedule"),
+        tpu_energy_nj=tpu_e, pud_energy_nj=pud_e,
+        winner_energy="pud" if pud_e < tpu_e else "tpu",
     )
 
 
@@ -160,12 +226,16 @@ def plan_vote(n_bytes: int, x: int = 3, errors: ErrorModel | None = None,
     ctx, errors = _resolve(ctx, errors)
     tpu = tpu_bitwise_ns(n_bytes, n_operands=x)
     pud = pud_majx_ns(n_bytes, x, 32, errors, subarrays, ctx=ctx)
+    tpu_e = tpu_bitwise_energy_nj(n_bytes, n_operands=x)
+    pud_e = pud_majx_energy_nj(n_bytes, x, 32, errors, subarrays, ctx=ctx)
     winner = "pud" if pud < tpu else "tpu"
     return OffloadDecision(
         op=f"maj{x}_vote", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,
         winner=winner,
         detail=(f"tpu reads {x}x+writes 1x @819GB/s; pud issues "
                 f"{-(-(n_bytes*8)//lat.ROW_BITS)} MAJ{x} over {subarrays} subarrays"),
+        tpu_energy_nj=tpu_e, pud_energy_nj=pud_e,
+        winner_energy="pud" if pud_e < tpu_e else "tpu",
     )
 
 
@@ -175,11 +245,16 @@ def plan_broadcast(n_bytes: int, fanout: int,
                    ctx: Optional[ExecutionContext] = None) -> OffloadDecision:
     """One-to-``fanout`` replication: HBM copies vs Multi-RowCopy."""
     ctx, errors = _resolve(ctx, errors)
-    tpu = n_bytes * (1 + fanout) / HBM_BYTES_PER_S * 1e9
+    tpu = COST.hbm_ns(n_bytes * (1 + fanout))
     pud = pud_mrc_ns(n_bytes * fanout, min(fanout, 31), errors, subarrays,
                      ctx=ctx)
+    tpu_e = COST.hbm_energy_nj(n_bytes * (1 + fanout))
+    pud_e = pud_mrc_energy_nj(n_bytes * fanout, min(fanout, 31), errors,
+                              subarrays, ctx=ctx)
     winner = "pud" if pud < tpu else "tpu"
     return OffloadDecision(
         op=f"broadcast_x{fanout}", n_bytes=n_bytes, tpu_ns=tpu, pud_ns=pud,
         winner=winner, detail="MRC wipes/copies n_act-1 rows per 90ns issue",
+        tpu_energy_nj=tpu_e, pud_energy_nj=pud_e,
+        winner_energy="pud" if pud_e < tpu_e else "tpu",
     )

@@ -68,7 +68,8 @@ class ServiceConfig:
     queue_depth: int = 256        # global backpressure bound
     tenant_queue_depth: Optional[int] = None
     tenant_rows: int = 4096       # per-tenant arena row budget
-    tick_window_s: float = 0.0    # extra coalescing wait per tick
+    tick_window_s: float = 0.0    # extra coalescing wait before ticking
+                                  # (honored by serve() and the async loop)
     shed_late: bool = True        # drop past-deadline work at tick time
     latency_window: int = 512     # rolling SLO window (completions)
 
@@ -169,7 +170,8 @@ class PudService:
             with session.count_dispatches() as scope:
                 outcome = self.batcher.execute(plan, session)
             wall = time.perf_counter() - t0
-            self.slo.record_batch(len(plan), wall, scope.count, idx)
+            self.slo.record_batch(len(plan), wall, scope.count, idx,
+                                  energy_nj=scope.energy_nj)
             for req, result in zip(plan.requests, outcome.results):
                 pend = by_rid[req.rid]
                 pend.trace.end("execute")
@@ -202,6 +204,12 @@ class PudService:
         ``asyncio.gather(return_exceptions=True)`` convention).
         Admission rejections raise immediately — backpressure is the
         caller's to handle.
+
+        Honors ``cfg.tick_window_s`` exactly like the async loop: one
+        coalescing wait after admission, before the batching ticks —
+        giving co-submitted work from other threads the same window to
+        land in the queue and coalesce (not one wait per tick, which
+        would scale the wall time with the drain length).
         """
         slots: dict[int, object] = {}
 
@@ -212,6 +220,8 @@ class PudService:
 
         for i, req in enumerate(requests):
             self._enqueue(req, deliver_to(i))
+        if self.cfg.tick_window_s:
+            time.sleep(self.cfg.tick_window_s)
         while self.backlog:
             self.tick()
         return [slots[i] for i in range(len(requests))]

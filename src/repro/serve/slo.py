@@ -90,6 +90,10 @@ class SloSnapshot:
     rejected: int
     batches: int
     dispatches: int
+    #: CostModel-priced energy (nJ) the executing backends accrued across
+    #: all recorded batches (kernel launches + HBM traffic on pallas;
+    #: per-DRAM-command Fig. 5 energy on sim; 0 on oracle).
+    energy_nj: float
     p50_latency_s: Optional[float]
     p99_latency_s: Optional[float]
     throughput_rps: float
@@ -125,6 +129,7 @@ class SloMonitor:
         self.rejected = 0
         self.batches = 0
         self.dispatches = 0
+        self.energy_nj = 0.0
         self._latencies = collections.deque(maxlen=self._window)
         self._occupancy = collections.deque(maxlen=self._window)
         self.stragglers = StragglerDetector(n_workers=self._n_sessions)
@@ -143,9 +148,11 @@ class SloMonitor:
         self.rejected += 1
 
     def record_batch(self, n_requests: int, wall_s: float,
-                     dispatches: int, session_idx: int) -> None:
+                     dispatches: int, session_idx: int,
+                     energy_nj: float = 0.0) -> None:
         self.batches += 1
         self.dispatches += dispatches
+        self.energy_nj += energy_nj
         self._occupancy.append(float(n_requests))
         self.stragglers.record(session_idx, max(wall_s, 1e-9))
 
@@ -160,6 +167,7 @@ class SloMonitor:
             rejected=self.rejected,
             batches=self.batches,
             dispatches=self.dispatches,
+            energy_nj=self.energy_nj,
             p50_latency_s=_percentile(self._latencies, 50),
             p99_latency_s=_percentile(self._latencies, 99),
             throughput_rps=self.completed / elapsed,
